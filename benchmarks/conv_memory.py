@@ -1,0 +1,40 @@
+"""Fig. 4(b,e) — memory overhead of each convolution algorithm on
+cv1-cv12, exact (analytic, f32 bytes, batch=1 as on Mobile).  The paper's
+headline: MEC ~3.2x less overhead than im2col on average."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.convbench import CV_LAYERS, spec
+from repro.core.memory import ALL_OVERHEADS
+
+
+def rows(batch: int = 1):
+    out = []
+    for name in CV_LAYERS:
+        s = spec(name, batch=batch)
+        mb = {alg: fn(s) * 4 / 2 ** 20 for alg, fn in ALL_OVERHEADS.items()}
+        mb["ratio_im2col_mec"] = mb["im2col"] / mb["mec"]
+        mb["name"] = name
+        out.append(mb)
+    return out
+
+
+def main(emit=print):
+    rs = rows()
+    emit("table,name,us_per_call,derived")
+    ratios = []
+    for r in rs:
+        ratios.append(r["ratio_im2col_mec"])
+        emit(f"fig4b_memory,{r['name']},0,"
+             f"im2col={r['im2col']:.2f}MB;mec={r['mec']:.2f}MB;"
+             f"fft={r['fft']:.2f}MB;wino={r['winograd']:.2f}MB;"
+             f"ratio={r['ratio_im2col_mec']:.2f}x")
+    emit(f"fig4b_memory,geomean,0,"
+         f"im2col/mec={float(np.exp(np.mean(np.log(ratios)))):.2f}x"
+         f" (paper: ~3.2x avg)")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

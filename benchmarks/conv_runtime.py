@@ -1,0 +1,66 @@
+"""Fig. 4(c,d) — convolution runtime per algorithm on cv1-cv12 (CPU).
+
+This container is a single CPU core, so by default channels are capped at
+16/32 (geometry preserved) to keep the full sweep under a few minutes;
+``--full`` runs the exact paper sizes.  Memory numbers (conv_memory.py)
+are always exact.
+"""
+from __future__ import annotations
+
+import functools
+
+from benchmarks.convbench import CV_LAYERS, make_arrays, spec, time_us
+from repro.core import (direct_conv2d, fft_conv2d, im2col_conv2d, mec_conv2d,
+                        winograd_conv2d)
+
+
+def algorithms(s):
+    algs = {
+        "direct": lambda i, k: direct_conv2d(i, k, (s.s_h, s.s_w)),
+        "im2col": lambda i, k: im2col_conv2d(i, k, (s.s_h, s.s_w)),
+        "mecA": lambda i, k: mec_conv2d(i, k, (s.s_h, s.s_w), solution="A"),
+        "mecB": lambda i, k: mec_conv2d(i, k, (s.s_h, s.s_w), solution="B"),
+        "fft": lambda i, k: fft_conv2d(i, k, (s.s_h, s.s_w)),
+    }
+    if (s.k_h, s.k_w, s.s_h, s.s_w) == (3, 3, 1, 1):
+        algs["winograd"] = lambda i, k: winograd_conv2d(i, k)
+    return algs
+
+
+def run_layer(name: str, channel_cap=16, batch: int = 1, iters: int = 3):
+    s = spec(name, batch=batch, channel_cap=channel_cap)
+    inp, ker = make_arrays(s)
+    out = {}
+    for alg, fn in algorithms(s).items():
+        out[alg] = time_us(lambda fn=fn: fn(inp, ker), iters=iters)
+    return out
+
+
+def main(emit=print, channel_cap=16, iters: int = 3):
+    emit("table,name,us_per_call,derived")
+    speedups = []
+    for name in CV_LAYERS:
+        r = run_layer(name, channel_cap=channel_cap, iters=iters)
+        best_mec = min(r["mecA"], r["mecB"])
+        sp = r["im2col"] / best_mec
+        speedups.append(sp)
+        extra = (f";wino={r['winograd']:.0f}us" if "winograd" in r else "")
+        emit(f"fig4cd_runtime,{name},{best_mec:.0f},"
+             f"im2col={r['im2col']:.0f}us;direct={r['direct']:.0f}us;"
+             f"fft={r['fft']:.0f}us{extra};mec_vs_im2col={sp:.2f}x")
+    gm = 1.0
+    for s_ in speedups:
+        gm *= s_
+    gm **= 1.0 / len(speedups)
+    emit(f"fig4cd_runtime,geomean,0,mec_vs_im2col={gm:.2f}x "
+         f"(paper Mobile: ~1.2x, Server-CPU: up to 8.8x)")
+    return speedups
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--iters", type=int, default=3)
+    a = ap.parse_args()
+    main(channel_cap=None if a.full else 16, iters=a.iters)

@@ -1,0 +1,74 @@
+"""Roofline table: three terms per (arch x shape) on the single-pod mesh.
+
+Primary numbers come from the analytic cost model
+(repro.launch.costmodel) because XLA's cost_analysis counts while-loop
+(scan) bodies once (see costmodel docstring); the raw per-device HLO
+numbers from the dry-run artifacts are attached as ``raw_*`` lower
+bounds.  ``roofline_frac`` = useful-model-compute time / dominant term —
+the §Perf score."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs.archs import ARCHS
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.launch.costmodel import MeshShape, cell_cost
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "dryrun"
+
+
+def analyze_cell(arch: str, shape: str, mesh: MeshShape = MeshShape()):
+    cfg = ARCHS[arch]
+    cell = SHAPES[shape]
+    s = cell.seq_len
+    c = cell_cost(cfg, cell.kind, cell.global_batch, s, mesh)
+    t_c = c["flops"] / (mesh.chips * PEAK_FLOPS)
+    t_m = c["hbm_bytes_chip"] / HBM_BW
+    t_x = c["coll_bytes_chip"] / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    t_model = c["model_flops"] / (mesh.chips * PEAK_FLOPS)
+    frac = t_model / max(t_c, t_m, t_x)
+    raw = {}
+    f = RESULTS / f"{arch}__{shape}__pod.json"
+    if f.exists():
+        r = json.loads(f.read_text())
+        raw = {"raw_flops_dev": r["per_device"]["flops"],
+               "raw_coll_dev": r["per_device"]["collectives"]["total"],
+               "raw_coll_mix": {k: v for k, v in
+                                r["per_device"]["collectives"].items()
+                                if isinstance(v, int) and v and k != "total"
+                                and k != "count"},
+               "peak_bytes_dev": r["per_device"]["memory"]["peak_bytes"]}
+    return {"arch": arch, "shape": shape, "kind": cell.kind,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom, "roofline_frac": frac,
+            "useful_flop_ratio": c["model_flops"] / max(c["flops"], 1.0),
+            **raw}
+
+
+def all_rows(mesh: MeshShape = MeshShape()):
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if cell_applicable(arch, shape):
+                rows.append(analyze_cell(arch, shape, mesh))
+    return rows
+
+
+def main(emit=print):
+    emit("table,name,us_per_call,derived")
+    for r in all_rows():
+        emit(f"roofline,{r['arch']}__{r['shape']},"
+             f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.0f},"
+             f"tc={r['t_compute_s']*1e6:.0f}us;tm={r['t_memory_s']*1e6:.0f}us;"
+             f"tx={r['t_collective_s']*1e6:.0f}us;dominant={r['dominant']};"
+             f"useful={r['useful_flop_ratio']:.2f};"
+             f"frac={r['roofline_frac']:.3f}")
+    return all_rows()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark driver — one section per paper table/figure plus the
+TPU-side analyses.  Prints ``table,name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run           # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig4b_memory
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import (conv_memory, conv_runtime, ks_sweep, resnet101,
+                        roofline, tpu_traffic)
+
+SECTIONS = {
+    "fig4b_memory": conv_memory.main,        # Fig 4(b,e): memory overhead
+    "fig4cd_runtime": conv_runtime.main,     # Fig 4(c,d): runtime
+    "fig4a_ks_sweep": ks_sweep.main,         # Fig 4(a): k/s sweep
+    "table3_resnet101": resnet101.main,      # Table 3: ResNet-101 weighted
+    "tpu_traffic": tpu_traffic.main,         # DESIGN §2: kernel HBM model
+    "roofline": roofline.main,               # assignment §Roofline
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    args = ap.parse_args()
+    for name, fn in SECTIONS.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} ===")
+        fn()
+
+
+if __name__ == "__main__":
+    main()

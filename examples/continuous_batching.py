@@ -1,0 +1,36 @@
+"""Continuous-batching serving demo: 6 requests of varying prompt lengths
+stream through a 3-slot pool (vLLM-style admission + slot recycling).
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import smoke_config
+from repro.models.lm import LM
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def main():
+    cfg = smoke_config("yi-6b")
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    batcher = ContinuousBatcher(model, params, n_slots=3, max_len=96)
+    for i in range(6):
+        prompt = jax.random.randint(jax.random.key(i), (4 + 5 * i,), 0,
+                                    cfg.vocab, jnp.int32)
+        batcher.submit(Request(rid=i, prompt=prompt, max_new_tokens=8))
+    t0 = time.time()
+    done = batcher.run_until_done()
+    dt = time.time() - t0
+    total = sum(len(r.out) for r in done)
+    print(f"[cb] {len(done)} requests, {total} tokens in {dt:.1f}s "
+          f"({total/dt:.1f} tok/s incl. compiles)")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"[cb] req {r.rid} (prompt {len(r.prompt)}): {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Batched LM serving through the framework's prefill/decode path —
+zamba2 (hybrid) so the MEC conv1d kernel dataflow runs in decode too.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "zamba2-7b", "--smoke", "--batch", "4",
+          "--prompt-len", "24", "--gen", "12", "--temperature", "0.8"])

@@ -1,0 +1,110 @@
+"""End-to-end driver (the paper's native kind): train a CNN classifier
+whose every convolution runs through MEC, on synthetic structured images.
+
+    PYTHONPATH=src python examples/train_cnn.py --steps 200
+    PYTHONPATH=src python examples/train_cnn.py --width 64 --steps 300  # bigger
+
+The task: classify which quadrant of the image carries a bright blob —
+learnable only through spatial convolution, so a falling loss is evidence
+the MEC conv path trains correctly (gradients flow through the lowering).
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mec_conv2d, pad_same
+from repro.optim import adamw
+
+
+def conv_layer(p, x, stride=1):
+    x = pad_same(x, p["w"].shape[0], p["w"].shape[1], stride, stride)
+    y = mec_conv2d(x, p["w"], stride)
+    return jax.nn.relu(y + p["b"])
+
+
+def init_conv(key, kh, kw, cin, cout):
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout)) *
+            (kh * kw * cin) ** -0.5,
+            "b": jnp.zeros((cout,))}
+
+
+def init_model(key, width):
+    ks = jax.random.split(key, 5)
+    return {
+        "c1": init_conv(ks[0], 3, 3, 1, width),
+        "c2": init_conv(ks[1], 3, 3, width, width),
+        "c3": init_conv(ks[2], 3, 3, width, 2 * width),
+        "head": {"w": jax.random.normal(ks[3], (2 * width, 4)) * 0.05,
+                 "b": jnp.zeros((4,))},
+    }
+
+
+def forward(p, imgs):
+    x = conv_layer(p["c1"], imgs, 2)
+    x = conv_layer(p["c2"], x, 2)
+    x = conv_layer(p["c3"], x, 2)
+    x = x.mean(axis=(1, 2))
+    return x @ p["head"]["w"] + p["head"]["b"]
+
+
+def make_batch(key, batch, size=32):
+    kq, kn, kp = jax.random.split(key, 3)
+    labels = jax.random.randint(kq, (batch,), 0, 4)
+    noise = 0.3 * jax.random.normal(kn, (batch, size, size, 1))
+    cy = (labels // 2) * (size // 2) + size // 4
+    cx = (labels % 2) * (size // 2) + size // 4
+    yy, xx = jnp.mgrid[0:size, 0:size]
+    blob = jnp.exp(-(((yy[None] - cy[:, None, None]) ** 2
+                      + (xx[None] - cx[:, None, None]) ** 2) / 18.0))
+    return noise + blob[..., None], labels
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args(argv)
+
+    params = init_model(jax.random.key(0), args.width)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train_cnn] {n_params/1e3:.1f}k params, every conv via MEC")
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=10, weight_decay=0.01)
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(params, opt, key):
+        imgs, labels = make_batch(key, args.batch)
+
+        def loss_fn(p):
+            logits = forward(p, imgs)
+            return -jax.nn.log_softmax(logits)[
+                jnp.arange(args.batch), labels].mean(), logits
+
+        (loss, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        acc = (logits.argmax(-1) == labels).mean()
+        params, opt, _ = adamw.update(opt_cfg, g, opt, params)
+        return params, opt, loss, acc
+
+    key = jax.random.key(1)
+    t0 = time.time()
+    for i in range(args.steps):
+        key, sub = jax.random.split(key)
+        params, opt, loss, acc = step(params, opt, sub)
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"[train_cnn] step {i:4d} loss {float(loss):.4f} "
+                  f"acc {float(acc):.2f}")
+    print(f"[train_cnn] done in {time.time()-t0:.0f}s; final acc "
+          f"{float(acc):.2f} (random = 0.25)")
+    assert float(acc) > 0.8, "MEC conv training failed to learn"
+    return float(acc)
+
+
+if __name__ == "__main__":
+    main()

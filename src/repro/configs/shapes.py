@@ -1,0 +1,115 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+LM shapes (per assignment): train_4k / prefill_32k lower ``train_step`` /
+``prefill``; decode_32k / long_500k lower ``serve_step`` (one token against
+a seq_len cache).  long_500k runs only for sub-quadratic archs
+(zamba2-7b, xlstm-125m) — see DESIGN.md §5 for the recorded skips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serve
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# archs with O(1)/sub-quadratic decode state — the only ones that run long_500k
+LONG_CONTEXT_ARCHS = ("zamba2-7b", "xlstm-125m")
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def smoke_shape(cell: ShapeCell) -> ShapeCell:
+    return dataclasses.replace(cell, seq_len=32, global_batch=2)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        s_text = s - cfg.prefix_len
+        return {"tokens": _sds((b, s_text), jnp.int32),
+                "labels": _sds((b, s_text), jnp.int32),
+                "vision": _sds((b, cfg.prefix_len, cfg.d_model), dt)}
+    if cfg.family == "audio":
+        return {"tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+                "frames": _sds((b, cfg.encoder_len, cfg.d_model), dt)}
+    return {"tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    spec = train_input_specs(cfg, cell)
+    spec.pop("labels")
+    return spec
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    """Decode: one new token against a seq_len cache."""
+    model = LM(cfg)
+    cache = jax.eval_shape(
+        lambda: serve.init_decode_cache(model, cell.global_batch,
+                                        cell.seq_len))
+    return {"cache": cache,
+            "tokens": _sds((cell.global_batch, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    if cell.kind == "train":
+        return train_input_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_input_specs(cfg, cell)
+    return decode_input_specs(cfg, cell)
+
+
+def make_batch(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> Dict:
+    """Concrete synthetic batch matching input_specs (for smokes/examples)."""
+    if cell.kind == "decode":
+        model = LM(cfg)
+        cache = serve.init_decode_cache(model, cell.global_batch,
+                                        cell.seq_len)
+        tokens = jax.random.randint(jax.random.key(seed),
+                                    (cell.global_batch, 1), 0,
+                                    cfg.vocab, dtype=jnp.int32)
+        return {"cache": cache, "tokens": tokens}
+    specs = input_specs(cfg, cell)
+    key = jax.random.key(seed)
+
+    def gen(path, s):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jax.random.randint(sub, s.shape, 0, max(2, cfg.vocab - 1),
+                                      dtype=s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(gen, specs)

@@ -1,0 +1,16 @@
+"""Core MEC algorithm (paper contribution) and the baselines it is
+compared against in §4 of the paper."""
+from repro.core.convspec import ConvSpec, pad_same, spec_of
+from repro.core.direct import direct_conv2d
+from repro.core.fft_conv import fft_conv2d
+from repro.core.im2col import im2col_conv2d, im2col_lower
+from repro.core.mec import (mec_conv1d_depthwise, mec_conv2d, mec_lower,
+                            vanilla_mec)
+from repro.core.winograd import winograd_conv2d
+
+__all__ = [
+    "ConvSpec", "pad_same", "spec_of",
+    "mec_conv2d", "mec_lower", "vanilla_mec", "mec_conv1d_depthwise",
+    "im2col_conv2d", "im2col_lower",
+    "direct_conv2d", "fft_conv2d", "winograd_conv2d",
+]

@@ -1,0 +1,70 @@
+"""Shared convolution geometry helpers (paper Table 1 / Eq. 1).
+
+All tensors are NHWC (the paper's n-h-w-c) and kernels are HWIO
+(k_h, k_w, i_c, k_c).  Padding is assumed to have been applied to the
+input already (paper §2.1); helpers to apply SAME/VALID padding live here
+so every algorithm sees an identical pre-padded input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry of one 2-D convolution, pre-padding (paper Eq. 1)."""
+
+    i_n: int
+    i_h: int
+    i_w: int
+    i_c: int
+    k_h: int
+    k_w: int
+    k_c: int
+    s_h: int = 1
+    s_w: int = 1
+
+    @property
+    def o_h(self) -> int:
+        return (self.i_h - self.k_h) // self.s_h + 1
+
+    @property
+    def o_w(self) -> int:
+        return (self.i_w - self.k_w) // self.s_w + 1
+
+    @property
+    def out_shape(self) -> Tuple[int, int, int, int]:
+        return (self.i_n, self.o_h, self.o_w, self.k_c)
+
+    def validate(self) -> None:
+        if self.i_h < self.k_h or self.i_w < self.k_w:
+            raise ValueError(f"kernel larger than input: {self}")
+        if min(self.s_h, self.s_w) < 1:
+            raise ValueError(f"strides must be >= 1: {self}")
+
+
+def spec_of(inp: jnp.ndarray, kernel: jnp.ndarray, stride) -> ConvSpec:
+    s_h, s_w = (stride, stride) if isinstance(stride, int) else stride
+    i_n, i_h, i_w, i_c = inp.shape
+    k_h, k_w, kic, k_c = kernel.shape
+    if kic != i_c:
+        raise ValueError(f"channel mismatch: input {i_c} kernel {kic}")
+    spec = ConvSpec(i_n, i_h, i_w, i_c, k_h, k_w, k_c, s_h, s_w)
+    spec.validate()
+    return spec
+
+
+def pad_same(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int = 1, s_w: int = 1) -> jnp.ndarray:
+    """Explicit SAME padding (the paper assumes pre-padded input)."""
+    _, i_h, i_w, _ = inp.shape
+    o_h = -(-i_h // s_h)
+    o_w = -(-i_w // s_w)
+    pad_h = max((o_h - 1) * s_h + k_h - i_h, 0)
+    pad_w = max((o_w - 1) * s_w + k_w - i_w, 0)
+    return jnp.pad(
+        inp,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )

@@ -1,0 +1,27 @@
+"""Direct convolution (paper Fig. 1a) — via lax.conv_general_dilated.
+
+XLA's direct convolution is the "no memory-overhead" reference point and
+the numerical ground truth for every other algorithm in this package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "precision"))
+def direct_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
+                  precision=None) -> jnp.ndarray:
+    """inp (n, h, w, c) pre-padded; kernel (k_h, k_w, i_c, k_c); VALID."""
+    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    return lax.conv_general_dilated(
+        inp, kernel,
+        window_strides=s,
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=precision,
+        preferred_element_type=jnp.float32,
+    ).astype(inp.dtype)

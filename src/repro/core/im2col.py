@@ -1,0 +1,38 @@
+"""Conventional im2col-based convolution (the paper's main baseline).
+
+Lowers the input into the full Toeplitz matrix ``(i_n*o_h*o_w, k_h*k_w*i_c)``
+(paper Eq. 2) and performs a single GEMM — exactly the Conv.cpu/Conv.gpu
+baseline of §4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convspec import spec_of
+
+
+def im2col_lower(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int, s_w: int) -> jnp.ndarray:
+    """inp (i_n, i_h, i_w, i_c) -> L (i_n*o_h*o_w, k_h*k_w*i_c)."""
+    i_n, i_h, i_w, i_c = inp.shape
+    o_h = (i_h - k_h) // s_h + 1
+    o_w = (i_w - k_w) // s_w + 1
+    hidx = s_h * jnp.arange(o_h)[:, None] + jnp.arange(k_h)[None, :]  # (o_h, k_h)
+    widx = s_w * jnp.arange(o_w)[:, None] + jnp.arange(k_w)[None, :]  # (o_w, k_w)
+    # (i_n, o_h, k_h, o_w, k_w, i_c)
+    low = inp[:, hidx[:, :, None, None], widx[None, None, :, :], :]
+    low = jnp.transpose(low, (0, 1, 3, 2, 4, 5))  # (i_n, o_h, o_w, k_h, k_w, i_c)
+    return low.reshape(i_n * o_h * o_w, k_h * k_w * i_c)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "precision"))
+def im2col_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
+                  precision=None) -> jnp.ndarray:
+    spec = spec_of(inp, kernel, stride)
+    low = im2col_lower(inp, spec.k_h, spec.k_w, spec.s_h, spec.s_w)
+    kernel_mat = kernel.reshape(spec.k_h * spec.k_w * spec.i_c, spec.k_c)
+    out = jnp.dot(low, kernel_mat.astype(low.dtype), precision=precision,
+                  preferred_element_type=jnp.float32).astype(low.dtype)
+    return out.reshape(spec.out_shape)

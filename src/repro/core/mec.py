@@ -1,0 +1,185 @@
+"""MEC: Memory-efficient Convolution (Cho & Brand, ICML 2017) — pure JAX.
+
+Faithful implementation of Algorithm 1 (VanillaMEC) and Algorithm 2 (MEC
+with channels/mini-batch and Solutions A/B).  The lowered tensor
+``L (i_n, o_w, i_h, k_w, i_c)`` is materialized exactly as in the paper
+(Eq. 3) and the o_h output rows are produced by *shifted* reads of L at
+stride ``s_h * k_w * i_c`` (the BLAS ld-aliasing trick, here expressed as a
+``lax.scan`` of ``dynamic_slice`` + GEMM so no im2col-sized intermediate is
+ever created).
+
+The Pallas TPU kernels in ``repro.kernels`` implement the same algorithm
+with explicit HBM->VMEM tiling; this module is the algorithmic reference
+and the CPU/benchmark path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.convspec import ConvSpec, spec_of
+
+# Paper §3.3: platform-dependent threshold T for choosing Solution A vs B.
+# ("we found T around 100 to be a good threshold for latest GPUs")
+SOLUTION_T = 100
+
+
+def mec_lower(inp: jnp.ndarray, k_w: int, s_w: int) -> jnp.ndarray:
+    """Compact lowering, Algorithm 2 lines 4-6.
+
+    inp: (i_n, i_h, i_w, i_c)  ->  L: (i_n, o_w, i_h, k_w, i_c)
+    L[n, w, h, :, :] = I[n, h, s_w*w : s_w*w + k_w, :]
+    """
+    i_n, i_h, i_w, i_c = inp.shape
+    o_w = (i_w - k_w) // s_w + 1
+    # Gather of width-windows: idx[w, j] = s_w*w + j.
+    idx = s_w * jnp.arange(o_w)[:, None] + jnp.arange(k_w)[None, :]
+    # (i_n, i_h, o_w, k_w, i_c) -> (i_n, o_w, i_h, k_w, i_c)
+    low = inp[:, :, idx, :]
+    return jnp.transpose(low, (0, 2, 1, 3, 4))
+
+
+def _shifted_rows_scan(l_mat: jnp.ndarray, kernel_mat: jnp.ndarray,
+                       o_h: int, row_stride: int, window: int,
+                       precision) -> jnp.ndarray:
+    """Compute the o_h shifted GEMMs: out[h] = L[:, h*row_stride : +window] @ K.
+
+    l_mat: (rows, i_h*k_w*i_c); kernel_mat: (window, k_c).
+    Returns (o_h, rows, k_c).  Uses scan so only one window is live at a
+    time (this is the JAX analogue of the paper's o_h BLAS calls on
+    overlapping sub-matrix views).
+    """
+
+    def body(_, h):
+        win = lax.dynamic_slice_in_dim(l_mat, h * row_stride, window, axis=1)
+        out = jnp.dot(win, kernel_mat, precision=precision,
+                      preferred_element_type=jnp.float32)
+        return None, out.astype(l_mat.dtype)
+
+    _, rows = lax.scan(body, None, jnp.arange(o_h))
+    return rows
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "solution", "threshold", "precision"))
+def mec_conv2d(
+    inp: jnp.ndarray,
+    kernel: jnp.ndarray,
+    stride=1,
+    solution: str = "auto",
+    threshold: int = SOLUTION_T,
+    precision=None,
+) -> jnp.ndarray:
+    """O = I * K via MEC (Algorithm 2).
+
+    inp: (i_n, i_h, i_w, i_c) pre-padded; kernel: (k_h, k_w, i_c, k_c).
+    solution: 'A' | 'B' | 'auto' (paper line 8: A iff o_w <= T and |O| <= |L|).
+    Returns (i_n, o_h, o_w, k_c) in n-h-w-c.
+    """
+    spec = spec_of(inp, kernel, stride)
+    i_n, i_h, i_c = spec.i_n, spec.i_h, spec.i_c
+    k_h, k_w, k_c = spec.k_h, spec.k_w, spec.k_c
+    o_h, o_w = spec.o_h, spec.o_w
+    s_h = spec.s_h
+
+    if solution == "auto":
+        size_o = i_n * o_h * o_w * k_c
+        size_l = i_n * o_w * i_h * k_w * i_c
+        solution = "A" if (o_w <= threshold and size_o <= size_l) else "B"
+
+    low = mec_lower(inp, k_w, spec.s_w)  # (i_n, o_w, i_h, k_w, i_c)
+    kernel_mat = kernel.reshape(k_h * k_w * i_c, k_c).astype(low.dtype)
+    row_stride = s_h * k_w * i_c
+    window = k_h * k_w * i_c
+
+    if solution == "A":
+        # Lines 9-19: one GEMM per output row over the whole mini-batch.
+        l_mat = low.reshape(i_n * o_w, i_h * k_w * i_c)
+        rows = _shifted_rows_scan(l_mat, kernel_mat, o_h, row_stride, window,
+                                  precision)  # (o_h, i_n*o_w, k_c)
+        # Intermediate is h-n-w-c (line 13); restore n-h-w-c (lines 14-19).
+        out = rows.reshape(o_h, i_n, o_w, k_c)
+        return jnp.transpose(out, (1, 0, 2, 3))
+
+    if solution == "B":
+        # Lines 21-25: per-sample GEMMs -> directly n-h-w-c.
+        l_mat = low.reshape(i_n, o_w, i_h * k_w * i_c)
+
+        def body(_, h):
+            win = lax.dynamic_slice_in_dim(l_mat, h * row_stride, window, axis=2)
+            out = jnp.einsum("nwk,kc->nwc", win, kernel_mat,
+                             precision=precision,
+                             preferred_element_type=jnp.float32)
+            return None, out.astype(low.dtype)
+
+        _, rows = lax.scan(body, None, jnp.arange(o_h))  # (o_h, i_n, o_w, k_c)
+        return jnp.transpose(rows, (1, 0, 2, 3))
+
+    raise ValueError(f"unknown solution {solution!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def vanilla_mec(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1) -> jnp.ndarray:
+    """Algorithm 1: single channel, single sample.
+
+    inp: (i_h, i_w); kernel: (k_h, k_w).  Returns (o_h, o_w).
+    """
+    i_h, i_w = inp.shape
+    k_h, k_w = kernel.shape
+    s_h, s_w = (stride, stride) if isinstance(stride, int) else stride
+    o_h = (i_h - k_h) // s_h + 1
+    o_w = (i_w - k_w) // s_w + 1
+
+    # Lines 4-6: L[w, h, 0:k_w] = I[h, s_w*w : s_w*w + k_w]
+    idx = s_w * jnp.arange(o_w)[:, None] + jnp.arange(k_w)[None, :]
+    low = jnp.transpose(inp[:, idx], (1, 0, 2))  # (o_w, i_h, k_w)
+    l_mat = low.reshape(o_w, i_h * k_w)
+    kernel_mat = kernel.reshape(k_h * k_w, 1)
+
+    # Lines 10-12: O[h] = L[0:o_w, s_h*k_w*h : +k_h*k_w] x K
+    def body(_, h):
+        win = lax.dynamic_slice_in_dim(l_mat, h * s_h * k_w, k_h * k_w, axis=1)
+        return None, (win @ kernel_mat)[:, 0]
+
+    _, out = lax.scan(body, None, jnp.arange(o_h))
+    return out  # (o_h, o_w)
+
+
+def mec_conv1d_shift(inp: jnp.ndarray, kernel: jnp.ndarray,
+                     causal: bool = True) -> jnp.ndarray:
+    """Fused-dataflow causal depthwise conv1d: k_w shifted scaled adds,
+    no lowered tensor at all (the XLA-level expression of what the fused
+    Pallas kernel does in VMEM).  Same math as mec_conv1d_depthwise but
+    ~k_w x less intermediate HBM traffic."""
+    n, t, c = inp.shape
+    k_w, kc = kernel.shape
+    assert kc == c, (kernel.shape, inp.shape)
+    pad = k_w - 1 if causal else 0
+    xp = jnp.pad(inp, ((0, 0), (pad, 0), (0, 0))) if pad else inp
+    acc = jnp.zeros((n, t, c), jnp.float32)
+    for j in range(k_w):
+        acc = acc + xp[:, j:j + t, :].astype(jnp.float32) * kernel[j]
+    return acc.astype(inp.dtype)
+
+
+def mec_conv1d_depthwise(inp: jnp.ndarray, kernel: jnp.ndarray,
+                         causal: bool = True) -> jnp.ndarray:
+    """Depthwise causal conv1d via the MEC column-strip lowering.
+
+    inp: (n, t, c); kernel: (k_w, c).  In 1-D the compact L coincides with
+    im2col (no vertical axis to deduplicate — Eq. 4 with i_h == k_h == 1);
+    the memory win here comes from the fused Pallas kernel
+    (repro.kernels.mec_conv1d) which never materializes L.  This reference
+    materializes the small L for oracle purposes.
+    """
+    n, t, c = inp.shape
+    k_w, kc = kernel.shape
+    assert kc == c, (kernel.shape, inp.shape)
+    if causal:
+        inp = jnp.pad(inp, ((0, 0), (k_w - 1, 0), (0, 0)))
+    idx = jnp.arange(t)[:, None] + jnp.arange(k_w)[None, :]
+    low = inp[:, idx, :]  # (n, t, k_w, c)
+    return jnp.einsum("ntkc,kc->ntc", low, kernel)

@@ -1,0 +1,58 @@
+"""Winograd F(2x2, 3x3) convolution (paper's Wino.cpu/Wino.gpu baseline).
+
+Applicable only when k_h == k_w == 3 and s == 1 (the paper notes the same
+restriction).  Implements the Lavin (2015) formulation: kernel transform
+U = G g G^T, input-tile transform V = B^T d B, elementwise products
+M = U . V reduced over input channels, inverse transform Y = A^T M A.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convspec import spec_of
+
+_BT = jnp.array(
+    [[1, 0, -1, 0],
+     [0, 1, 1, 0],
+     [0, -1, 1, 0],
+     [0, 1, 0, -1]], dtype=jnp.float32)
+_G = jnp.array(
+    [[1, 0, 0],
+     [0.5, 0.5, 0.5],
+     [0.5, -0.5, 0.5],
+     [0, 0, 1]], dtype=jnp.float32)
+_AT = jnp.array(
+    [[1, 1, 1, 0],
+     [0, 1, -1, -1]], dtype=jnp.float32)
+
+
+@jax.jit
+def winograd_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """inp (n, h, w, c) pre-padded; kernel (3, 3, i_c, k_c); stride 1 VALID."""
+    spec = spec_of(inp, kernel, 1)
+    if (spec.k_h, spec.k_w) != (3, 3):
+        raise ValueError("Winograd F(2x2,3x3) requires a 3x3 kernel")
+    o_h, o_w = spec.o_h, spec.o_w
+    t_h, t_w = -(-o_h // 2), -(-o_w // 2)          # number of 2x2 output tiles
+    need_h, need_w = 2 * t_h + 2, 2 * t_w + 2      # input extent covered by tiles
+    x = jnp.pad(inp.astype(jnp.float32),
+                ((0, 0), (0, need_h - spec.i_h), (0, need_w - spec.i_w), (0, 0)))
+
+    # Extract overlapping 4x4 input tiles at stride 2: (n, t_h, t_w, 4, 4, c).
+    hidx = 2 * jnp.arange(t_h)[:, None] + jnp.arange(4)[None, :]
+    widx = 2 * jnp.arange(t_w)[:, None] + jnp.arange(4)[None, :]
+    tiles = x[:, hidx[:, None, :, None], widx[None, :, None, :], :]
+
+    # V = B^T d B  (transform each tile)
+    v = jnp.einsum("ij,nthjkc,lk->nthilc", _BT, tiles, _BT)
+    # U = G g G^T  (transform each kernel) -> (4, 4, c, kc)
+    u = jnp.einsum("ij,jkco,lk->ilco", _G, kernel.astype(jnp.float32), _G)
+    # M = sum_c U . V  -> (n, t_h, t_w, 4, 4, kc)
+    m = jnp.einsum("nthilc,ilco->nthilo", v, u)
+    # Y = A^T M A -> (n, t_h, t_w, 2, 2, kc)
+    y = jnp.einsum("ij,nthjko,lk->nthilo", _AT, m, _AT)
+    out = y.transpose(0, 1, 3, 2, 4, 5).reshape(spec.i_n, 2 * t_h, 2 * t_w, spec.k_c)
+    return out[:, :o_h, :o_w, :].astype(inp.dtype)

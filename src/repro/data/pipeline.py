@@ -1,0 +1,83 @@
+"""Deterministic synthetic data pipeline with exact-resume state.
+
+Batches are generated from (seed, step) only — any host can regenerate any
+step, which gives:
+* per-host sharding without communication (host h of H takes rows
+  h::H of the global batch),
+* exact resume after preemption (state = {"step": N} rides in the
+  checkpoint),
+* straggler-independent determinism (no host ever waits on a data server).
+
+Real deployments swap `_synth_tokens` for a tokenized shard reader with
+the same (seed, step) -> batch contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class DataState:
+    step: int = 0
+
+    def to_dict(self):
+        return {"step": np.asarray(self.step)}
+
+    @staticmethod
+    def from_dict(d):
+        return DataState(step=int(np.asarray(d["step"])))
+
+
+class SyntheticLMData:
+    def __init__(self, cfg: ModelConfig, global_batch: int, seq_len: int,
+                 seed: int = 0, host_id: int = 0, num_hosts: int = 1):
+        assert global_batch % num_hosts == 0
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.local_batch = global_batch // num_hosts
+        self.seq_len = seq_len
+        self.seed = seed
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.state = DataState()
+
+    def _synth_tokens(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        full = rng.integers(0, self.cfg.vocab,
+                            size=(self.global_batch, self.seq_len + 1),
+                            dtype=np.int32)
+        # learnable structure: every token in a row shares a "topic"
+        # residue mod 16, inferable from any earlier token -> achievable
+        # NLL is ~ln(vocab) - ln(16) below the random floor
+        topic = rng.integers(0, 16, size=(self.global_batch, 1),
+                             dtype=np.int32)
+        full = (full // 16) * 16 + topic
+        full %= self.cfg.vocab
+        return full[self.host_id::self.num_hosts]
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        step = self.state.step
+        full = self._synth_tokens(step)
+        batch = {"tokens": jnp.asarray(full[:, :-1]),
+                 "labels": jnp.asarray(full[:, 1:])}
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            rng = np.random.default_rng(step + 17)
+            batch["vision"] = jnp.asarray(
+                rng.standard_normal((self.local_batch, cfg.prefix_len,
+                                     cfg.d_model)).astype(np.float32))
+        if cfg.family == "audio":
+            rng = np.random.default_rng(step + 31)
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((self.local_batch, cfg.encoder_len,
+                                     cfg.d_model)).astype(np.float32))
+        self.state.step += 1
+        return batch

@@ -1,0 +1,68 @@
+"""Public jit'd entry points for the MEC Pallas kernels.
+
+``interpret`` defaults to True when the backend has no TPU (this container
+is CPU-only; on a real TPU pod pass interpret=False or rely on the
+auto-detection).  Block sizes are chosen for v5e VMEM (~16 MiB/core):
+the fused kernel's working set is
+``i_w*i_c + k_w*i_c*k_c + w_blk*k_c`` floats per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mec_conv import (mec_conv_fused2_pallas,
+                                    mec_conv_fused_pallas, mec_gemm_pallas,
+                                    mec_lower_pallas)
+from repro.kernels.mec_conv1d import mec_conv1d_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pick_w_blk(o_w: int, k_c: int, target_bytes: int = 2 << 20) -> int:
+    """Output-column block: fill ~2 MiB of VMEM with the f32 accumulator,
+    rounded down to a multiple of 8 (sublane) and capped at o_w."""
+    blk = max(8, min(512, target_bytes // max(1, 4 * k_c)))
+    blk = (blk // 8) * 8
+    return max(1, min(blk, o_w))
+
+
+def mec_conv2d_tpu(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
+                   mode: str = "fused", interpret=None) -> jnp.ndarray:
+    """MEC convolution with Pallas kernels.
+
+    mode='lowered' is the paper-faithful path (L materialized in HBM,
+    Eq. 3 memory observable); mode='fused' is the beyond-paper fused path.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    s_h, s_w = (stride, stride) if isinstance(stride, int) else stride
+    i_n, i_h, i_w, i_c = inp.shape
+    k_h, k_w, _, k_c = kernel.shape
+    o_w = (i_w - k_w) // s_w + 1
+    w_blk = pick_w_blk(o_w, k_c)
+    if mode == "fused":
+        return mec_conv_fused_pallas(inp, kernel, (s_h, s_w), w_blk=w_blk,
+                                     interpret=interpret)
+    if mode == "fused2":   # h-blocked + halo: ~1x input fetch (EXPERIMENTS)
+        return mec_conv_fused2_pallas(inp, kernel, (s_h, s_w), w_blk=w_blk,
+                                      interpret=interpret)
+    if mode == "lowered":
+        low = mec_lower_pallas(inp, k_w, s_w, interpret=interpret)
+        kernel_mat = kernel.reshape(k_h, k_w * i_c, k_c)
+        out = mec_gemm_pallas(low, kernel_mat, k_h, s_h, w_blk=w_blk,
+                              interpret=interpret)
+        return out.astype(inp.dtype)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def mec_conv1d_tpu(x: jnp.ndarray, kernel: jnp.ndarray,
+                   interpret=None) -> jnp.ndarray:
+    """Fused causal depthwise conv1d (Mamba2 / xLSTM blocks)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return mec_conv1d_pallas(x, kernel, interpret=interpret)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results are appended as JSON files under results/dryrun/ (one per cell) —
+benchmarks/roofline.py and EXPERIMENTS.md read from there.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.archs import ARCHS
+from repro.configs.shapes import SHAPES, cell_applicable, input_specs
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import LM
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding
+from repro.parallel.axes import default_rules
+from repro.training import steps
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(mesh, rules, batch_specs):
+    b_ax = rules.rules.get("batch")
+    sizes = dict(mesh.shape)
+
+    def one(path, leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and b_ax is not None:
+            axes = (b_ax,) if isinstance(b_ax, str) else tuple(b_ax)
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if leaf.shape[0] % prod == 0:
+                spec[0] = b_ax
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_specs)
+
+
+def lower_cell(arch: str, shape: str, mesh, rules, opt_total_steps=1000,
+               cfg=None):
+    cfg = cfg or ARCHS[arch]
+    cell = SHAPES[shape]
+    model = LM(cfg)
+    specs = input_specs(cfg, cell)
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_specs = sharding.param_specs(params_shape, mesh)
+    p_shard = _named(mesh, p_specs)
+
+    if cell.kind == "train":
+        compressed = getattr(cfg, "grad_compress_int8", False)
+        opt_shape = jax.eval_shape(
+            lambda: steps.init_opt_state(params_shape, compressed=compressed))
+        o_specs = sharding.opt_state_specs(
+            p_specs, params_shape, mesh,
+            zero_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+        if compressed:
+            # ef holds per-DP-shard residuals behind an (unchecked)
+            # replicated spec — see make_compressed_train_step
+            o_specs = dict(o_specs, ef=jax.tree.map(
+                lambda l: P(*([None] * len(l.shape))), params_shape))
+        o_shard = _named(mesh, o_specs)
+        b_shard = batch_shardings(mesh, rules, specs)
+        builder = (steps.make_compressed_train_step if compressed
+                   else steps.make_train_step)
+        step = builder(model, AdamWConfig(total_steps=opt_total_steps), rules)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        args = (params_shape,
+                jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                             opt_shape), specs)
+    elif cell.kind == "prefill":
+        b_shard = batch_shardings(mesh, rules, specs)
+        cache_shape = jax.eval_shape(
+            lambda p, b: steps.make_prefill_step(model, cell.seq_len, rules)(p, b),
+            params_shape, specs)[1]
+        c_specs = sharding.cache_specs(cache_shape, mesh, rules)
+        fn = jax.jit(steps.make_prefill_step(model, cell.seq_len, rules),
+                     in_shardings=(p_shard, b_shard),
+                     out_shardings=(None, _named(mesh, c_specs)))
+        args = (params_shape, specs)
+    else:  # decode
+        c_specs = sharding.cache_specs(specs["cache"], mesh, rules)
+        c_shard = _named(mesh, c_specs)
+        t_shard = batch_shardings(mesh, rules, specs["tokens"])
+        fn = jax.jit(steps.make_decode_step(model, rules),
+                     in_shardings=(p_shard, c_shard, t_shard),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(1,))
+        args = (params_shape, specs["cache"], specs["tokens"])
+
+    lowered = fn.lower(*args)
+    return lowered, cfg, cell
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             overrides=None, tag_suffix: str = ""):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+    n_chips = mesh.devices.size
+    cfg = ARCHS[arch].with_(**overrides) if overrides else None
+    t0 = time.time()
+    with mesh:
+        lowered, cfg, cell = lower_cell(arch, shape, mesh, rules, cfg=cfg)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()    # per-device (partitioned module)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    terms = roofline_terms(flops_dev, bytes_dev, float(coll["total"]),
+                           n_chips=1)   # per-chip inputs
+    model_flops = 6 * cfg.param_count(active_only=True) * \
+        cell.seq_len * cell.global_batch
+    if cell.kind == "decode":
+        model_flops = 2 * cfg.param_count(active_only=True) * cell.global_batch
+    if cell.kind == "prefill":
+        model_flops = 2 * cfg.param_count(active_only=True) * \
+            cell.seq_len * cell.global_batch
+
+    result = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": flops_dev, "bytes_accessed": bytes_dev,
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+        },
+        "roofline": terms,
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flop_ratio": (model_flops / n_chips) / max(flops_dev, 1.0),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape}__{'multipod' if multi_pod else 'pod'}{tag_suffix}"
+    if overrides:
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=2))
+    print(f"[dryrun] {tag}: compile={t_compile:.0f}s "
+          f"flops/dev={flops_dev:.3e} coll/dev={coll['total']:.3e}B "
+          f"dominant={terms['dominant']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    cells = []
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            if not cell_applicable(arch, shape):
+                continue
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = []
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+        if args.skip_existing and (out_dir / f"{tag}.json").exists():
+            print(f"[dryrun] {tag}: cached")
+            continue
+        try:
+            run_cell(arch, shape, mp, out_dir)
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            print(f"[dryrun] {tag}: FAILED {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + ", ".join(t for t, _ in failures))
+    print(f"[dryrun] all {len(cells)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Post-SPMD HLO analysis: collective-bytes accounting + roofline terms.
+
+``collective_bytes`` parses the optimized (partitioned) HLO text and sums
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  Hardware constants are TPU v5e
+(assignment): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# v5e per-chip constants
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[8,128,2048]{2,1,0}
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+# replica_groups=[16,16]<=... (iota form) or ={{0,1},{2,3}} (explicit form)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes per collective kind, from partitioned HLO.
+
+    Operand types are not printed inline in optimized HLO dumps, so operand
+    bytes are derived from the result type: all-gather operand is
+    result/group_size, reduce-scatter operand is result*group_size, the
+    rest move result-sized operands.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_types, kind, variant = m.group(1), m.group(2), m.group(3)
+        if variant == "-done":        # async pair: count only the -start
+            continue
+        types = _TYPE_RE.findall(result_types)
+        if variant == "-start" and len(types) > 1:
+            # (operand, result) tuple: keep the result element(s)
+            types = types[len(types) // 2:]
+        total = sum(_shape_bytes(t, d) for t, d in types)
+        g = _group_size(line)
+        if kind == "all-gather":
+            total //= max(g, 1)
+        elif kind == "reduce-scatter":
+            total *= g
+        out[kind] += total
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> Dict[str, float]:
+    """Three roofline terms in seconds (assignment §Roofline).
+
+    flops/hbm_bytes are whole-program HLO totals (cost_analysis of the
+    partitioned module is per-device; see dryrun.py for which is passed).
+    """
+    t_compute = flops / (n_chips * PEAK_FLOPS)
+    t_memory = hbm_bytes / (n_chips * HBM_BW)
+    t_coll = coll_bytes / (n_chips * ICI_BW)
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,73 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf-iteration harness (assignment §Perf): re-lower one cell with
+config overrides and report before/after evidence:
+
+* analytic roofline terms (repro.launch.costmodel),
+* collective mix of the partitioned HLO (per-loop-body operand bytes —
+  XLA counts while bodies once, so these are per-layer-ish units, ideal
+  for before/after comparison of the collective *pattern*),
+* compiled peak memory per device.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen3-moe-30b-a3b \
+      --shape train_4k --set seq_parallel=True --tag sp
+"""
+import argparse
+import ast
+import json
+import pathlib
+
+from repro.launch.dryrun import RESULTS, run_cell
+
+PERF_DIR = RESULTS.parent / "perf"
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    try:
+        return k, ast.literal_eval(v)
+    except (ValueError, SyntaxError):
+        return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. seq_parallel=True")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    overrides = dict(parse_override(kv) for kv in args.set)
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    res = run_cell(args.arch, args.shape, args.multi_pod, PERF_DIR,
+                   overrides=overrides or None,
+                   tag_suffix=f"__{args.tag}")
+    # attach analytic terms for the same overrides
+    from repro.configs.archs import ARCHS
+    from repro.configs.shapes import SHAPES
+    from repro.launch.costmodel import MeshShape, cell_cost
+    from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+    cfg = ARCHS[args.arch].with_(**overrides)
+    cell = SHAPES[args.shape]
+    mesh = MeshShape(pod=2 if args.multi_pod else 1)
+    c = cell_cost(cfg, cell.kind, cell.global_batch, cell.seq_len, mesh)
+    t_c = c["flops"] / (mesh.chips * PEAK_FLOPS)
+    t_m = c["hbm_bytes_chip"] / HBM_BW
+    t_x = c["coll_bytes_chip"] / ICI_BW
+    t_model = c["model_flops"] / (mesh.chips * PEAK_FLOPS)
+    analytic = {"t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+                "roofline_frac": t_model / max(t_c, t_m, t_x)}
+    tag = (f"{args.arch}__{args.shape}__"
+           f"{'multipod' if args.multi_pod else 'pod'}__{args.tag}")
+    path = PERF_DIR / f"{tag}.json"
+    data = json.loads(path.read_text())
+    data["analytic"] = analytic
+    path.write_text(json.dumps(data, indent=2))
+    print(f"[perf] {tag}: frac={analytic['roofline_frac']:.3f} "
+          f"tc={t_c:.3f}s tm={t_m:.3f}s tx={t_x:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Serving launcher: batched prefill + decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, smoke_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import serve as serve_lib
+from repro.models.lm import LM
+from repro.parallel.axes import default_rules, use_rules
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", choices=["host", "production", "multipod"],
+                    default="host")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else ARCHS[args.arch]
+    model = LM(cfg)
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multipod"))
+    rules = default_rules(mesh)
+    max_len = args.prompt_len + args.gen + (
+        cfg.prefix_len if cfg.family == "vlm" else 0)
+
+    with mesh:
+        params = model.init(jax.random.key(0))
+        key = jax.random.key(1)
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision"] = jnp.zeros(
+                (args.batch, cfg.prefix_len, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_len, cfg.d_model), jnp.float32)
+
+        prefill = jax.jit(lambda p, b: serve_lib.prefill(model, p, b, max_len))
+        decode = jax.jit(lambda p, c, t: serve_lib.decode_step(model, p, c, t))
+
+        with use_rules(rules):
+            t0 = time.monotonic()
+            logits, cache = jax.block_until_ready(prefill(params, batch))
+            t_prefill = time.monotonic() - t0
+
+            def sample(logits, key):
+                if args.temperature <= 0:
+                    return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                return jax.random.categorical(
+                    key, logits / args.temperature)[:, None].astype(jnp.int32)
+
+            tok = sample(logits, key)
+            out = [tok]
+            t0 = time.monotonic()
+            for i in range(args.gen - 1):
+                key, sub = jax.random.split(key)
+                logits, cache = decode(params, cache, tok)
+                tok = sample(logits, sub)
+                out.append(tok)
+            jax.block_until_ready(tok)
+            t_decode = time.monotonic() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.0f}ms; decode {args.gen-1} steps @ "
+          f"{tps:.1f} tok/s (incl. first-step compile)")
+    print("[serve] sample tokens:", gen[0, :10].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,344 @@
+"""Unified language-model assembly for all assigned architecture families.
+
+Families (DESIGN.md §5):
+  dense / vlm — GQA transformer (llava = dense backbone + stub vision prefix)
+  moe         — GQA transformer with expert-parallel MoE FFN
+  hybrid      — zamba2: Mamba2 layers + ONE shared attention+MLP block
+                applied after every ``attn_every`` layers (weight sharing)
+  ssm         — xLSTM: mLSTM blocks with an sLSTM every ``slstm_every``
+  audio       — whisper: encoder (stub frame embeddings) + decoder with
+                cross-attention
+
+All stacks scan over layers (compile-time O(1) in depth); ``cfg.remat``
+wraps each block in jax.checkpoint.  Three entry points per model:
+``forward`` (train), ``prefill`` (build caches), ``decode_step`` (1 token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import mamba2, moe, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import (attention_block, attention_decode,
+                                 init_attention, init_kv_cache, init_linear,
+                                 init_swiglu, linear, rms_norm, swiglu)
+from repro.parallel.axes import constrain
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_dense_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dense_block(p, cfg, x, positions):
+    a, kv = attention_block(p["attn"], cfg, rms_norm(x, p["norm1"], cfg.norm_eps),
+                            positions)
+    # seq_parallel: the attn->mlp residual segment is sequence-sharded over
+    # the model axis (Megatron-SP): the partitioner emits reduce-scatter
+    # after the attn out-proj and all-gather before the next attention,
+    # replacing a full-operand all-reduce (half the collective bytes) and
+    # keeping norms/residual memory sharded.
+    seg = "seq_tp" if cfg.seq_parallel else "seq"
+    x = constrain(x + a, "batch", seg, "embed")
+    f = swiglu(rms_norm(x, p["norm2"], cfg.norm_eps), p["mlp"])
+    return constrain(x + f, "batch", "seq", "embed"), kv
+
+
+def init_moe_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "moe": moe.init_moe(k2, cfg, dtype),
+    }
+
+
+def moe_block(p, cfg, x, positions):
+    a, kv = attention_block(p["attn"], cfg, rms_norm(x, p["norm1"], cfg.norm_eps),
+                            positions)
+    # seq_parallel: seq-shard the residual segment feeding the MoE block so
+    # the attn out-proj reduce-scatters directly into the layout the EP
+    # shard_map wants (P(batch, model, None)) — no separate reshard.
+    seg = "seq_tp" if cfg.seq_parallel else "seq"
+    x = constrain(x + a, "batch", seg, "embed")
+    f, aux = moe.moe_ffn(p["moe"], cfg, rms_norm(x, p["norm2"], cfg.norm_eps))
+    return constrain(x + f, "batch", "seq", "embed"), kv, aux
+
+
+def init_gelu_mlp(key, d, f, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"up": init_linear(k1, d, f, dtype, bias=True),
+            "down": init_linear(k2, f, d, dtype, bias=True)}
+
+
+def gelu_mlp(x, p):
+    h = jax.nn.gelu(linear(x, p["up"]).astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "batch", "seq", "ffn")
+    return linear(h, p["down"])
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Functional model: params are plain pytrees, methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init --
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "emb": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_linear(keys[1], cfg.d_model, cfg.vocab, dt)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            params["blocks"] = _stack_init(
+                lambda k: init_dense_block(k, cfg, dt), keys[2], cfg.n_layers)
+            if fam == "vlm":
+                params["vision_proj"] = init_linear(keys[3], cfg.d_model,
+                                                    cfg.d_model, dt)
+        elif fam == "moe":
+            params["blocks"] = _stack_init(
+                lambda k: init_moe_block(k, cfg, dt), keys[2], cfg.n_layers)
+        elif fam == "hybrid":
+            n_super, tail = divmod(cfg.n_layers, cfg.attn_every)
+            params["mamba"] = jax.vmap(
+                lambda k: _stack_init(lambda kk: mamba2.init_mamba(kk, cfg, dt),
+                                      k, cfg.attn_every)
+            )(jax.random.split(keys[2], n_super))
+            if tail:
+                params["mamba_tail"] = _stack_init(
+                    lambda k: mamba2.init_mamba(k, cfg, dt), keys[3], tail)
+            params["shared"] = init_dense_block(keys[4], cfg, dt)
+            params["mamba_norms"] = jnp.ones((cfg.n_layers, cfg.d_model), dt)
+        elif fam == "ssm":
+            n_super = cfg.n_layers // cfg.slstm_every
+            k_m = cfg.slstm_every - 1
+            params["mlstm"] = jax.vmap(
+                lambda k: _stack_init(lambda kk: xlstm.init_mlstm(kk, cfg, dt),
+                                      k, k_m)
+            )(jax.random.split(keys[2], n_super))
+            params["slstm"] = _stack_init(
+                lambda k: xlstm.init_slstm(k, cfg, dt), keys[3], n_super)
+        elif fam == "audio":
+            params["enc_blocks"] = _stack_init(
+                lambda k: self._init_enc_block(k, dt), keys[2],
+                cfg.encoder_layers)
+            params["dec_blocks"] = _stack_init(
+                lambda k: self._init_dec_block(k, dt), keys[3], cfg.n_layers)
+            params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+        else:
+            raise ValueError(fam)
+        return params
+
+    def _init_enc_block(self, key, dt):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"norm1": jnp.ones((cfg.d_model,), dt),
+                "attn": init_attention(k1, cfg, dt),
+                "norm2": jnp.ones((cfg.d_model,), dt),
+                "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dt)}
+
+    def _init_dec_block(self, key, dt):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"norm1": jnp.ones((cfg.d_model,), dt),
+                "attn": init_attention(k1, cfg, dt),
+                "norm_x": jnp.ones((cfg.d_model,), dt),
+                "xattn": init_attention(k2, cfg, dt),
+                "norm2": jnp.ones((cfg.d_model,), dt),
+                "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, dt)}
+
+    # --------------------------------------------------------- embedding --
+    def embed(self, params, tokens):
+        h = jnp.take(params["emb"], tokens, axis=0)
+        return constrain(h, "batch", "seq", "embed")
+
+    def head_weights(self, params):
+        if self.cfg.tie_embeddings:
+            return params["emb"].T
+        return params["lm_head"]["w"]
+
+    # ------------------------------------------------------------ train --
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (final_hidden (B,S,d), aux_loss). Logits are produced by
+        the (chunked) loss to avoid materializing (B,S,V)."""
+        cfg = self.cfg
+        fam = cfg.family
+        if fam == "audio":
+            return self._forward_audio(params, batch)
+        tokens = batch["tokens"]
+        h = self.embed(params, tokens)
+        if fam == "vlm":
+            vis = linear(batch["vision"].astype(h.dtype), params["vision_proj"])
+            h = jnp.concatenate([vis, h], axis=1)
+        s = h.shape[1]
+        positions = jnp.arange(s)
+        aux = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "vlm"):
+            body = _maybe_remat(
+                lambda p, x: dense_block(p, cfg, x, positions)[0], cfg)
+            h, _ = lax.scan(lambda x, p: (body(p, x), None), h, params["blocks"])
+        elif fam == "moe":
+            def moe_body(p, x):
+                x2, _, a = moe_block(p, cfg, x, positions)
+                return x2, a
+            body = _maybe_remat(moe_body, cfg)
+
+            def f(carry, p):
+                x, acc = carry
+                x2, a = body(p, x)
+                return (x2, acc + a), None
+            (h, aux), _ = lax.scan(f, (h, aux), params["blocks"])
+            aux = aux * cfg.router_aux_coef / cfg.n_layers
+        elif fam == "hybrid":
+            h = self._hybrid_stack(params, h, positions, mode="train")
+        elif fam == "ssm":
+            h = self._ssm_stack(params, h, mode="train")
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if fam == "vlm":   # loss only over text positions
+            h = h[:, batch["vision"].shape[1]:, :]
+        return h, aux
+
+    # hybrid: scan over super-blocks of (attn_every mamba) + shared attn+mlp
+    def _hybrid_stack(self, params, h, positions, mode, caches=None):
+        cfg = self.cfg
+        n_super, tail = divmod(cfg.n_layers, cfg.attn_every)
+
+        seg = "seq_tp" if cfg.seq_parallel else "seq"
+        mamba_body = _maybe_remat(
+            lambda p, nrm, x: constrain(
+                x + mamba2.mamba_forward(p, cfg, rms_norm(x, nrm, cfg.norm_eps)),
+                "batch", seg, "embed"), cfg)
+
+        def super_step(x, inputs):
+            p_group, norms = inputs
+            x, _ = lax.scan(
+                lambda xx, pn: (mamba_body(pn[0], pn[1], xx), None),
+                x, (p_group, norms))
+            x, _ = dense_block(params["shared"], cfg, x, positions)
+            return x, None
+
+        norms = params["mamba_norms"][:n_super * cfg.attn_every].reshape(
+            n_super, cfg.attn_every, -1)
+        h, _ = lax.scan(super_step, h, (params["mamba"], norms))
+        if tail:
+            tail_norms = params["mamba_norms"][n_super * cfg.attn_every:]
+            h, _ = lax.scan(
+                lambda xx, pn: (mamba_body(pn[0], pn[1], xx), None),
+                h, (params["mamba_tail"], tail_norms))
+        return h
+
+    # ssm: supers of (slstm_every-1 mLSTM) + 1 sLSTM
+    def _ssm_stack(self, params, h, mode):
+        cfg = self.cfg
+        m_body = _maybe_remat(
+            lambda p, x: x + xlstm.mlstm_forward(p, cfg, x), cfg)
+        s_body = _maybe_remat(
+            lambda p, x: x + xlstm.slstm_forward(p, cfg, x), cfg)
+
+        def super_step(x, inputs):
+            p_m, p_s = inputs
+            x, _ = lax.scan(lambda xx, p: (m_body(p, xx), None), x, p_m)
+            return s_body(p_s, x), None
+
+        h, _ = lax.scan(super_step, h, (params["mlstm"], params["slstm"]))
+        return h
+
+    def _forward_audio(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        h = self.embed(params, tokens)
+        positions = jnp.arange(h.shape[1])
+
+        def dec_body(p, x):
+            return self._dec_block(p, x, positions, (None, None), enc)[0]
+        body = _maybe_remat(dec_body, cfg)
+        h, _ = lax.scan(lambda x, p: (body(p, x), None), h,
+                        params["dec_blocks"])
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return h, jnp.zeros((), jnp.float32)
+
+    def encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings (B, T, d)."""
+        cfg = self.cfg
+        h = frames.astype(_dtype(cfg))
+        positions = jnp.arange(h.shape[1])
+
+        def enc_body(p, x):
+            a, _ = attention_block(p["attn"], cfg,
+                                   rms_norm(x, p["norm1"], cfg.norm_eps),
+                                   positions, causal=False)
+            x = x + a
+            return x + gelu_mlp(rms_norm(x, p["norm2"], cfg.norm_eps), p["mlp"])
+        body = _maybe_remat(enc_body, cfg)
+        h, _ = lax.scan(lambda x, p: (body(p, x), None), h,
+                        params["enc_blocks"])
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _dec_block(self, p, x, positions, self_kv, enc):
+        cfg = self.cfg
+        a, kv = attention_block(p["attn"], cfg,
+                                rms_norm(x, p["norm1"], cfg.norm_eps),
+                                positions)
+        x = x + a
+        xa, xkv = attention_block(
+            p["xattn"], cfg, rms_norm(x, p["norm_x"], cfg.norm_eps),
+            positions, causal=False, use_rope=False,
+            kv_override=self._cross_kv(p, enc))
+        x = x + xa
+        x = x + gelu_mlp(rms_norm(x, p["norm2"], cfg.norm_eps), p["mlp"])
+        return x, kv
+
+    def _cross_kv(self, p, enc):
+        cfg = self.cfg
+        b, t, _ = enc.shape
+        k = linear(enc, p["xattn"]["wk"]).reshape(b, t, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        v = linear(enc, p["xattn"]["wv"]).reshape(b, t, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        return k, v

@@ -1,0 +1,173 @@
+"""Mamba2 block (SSD, chunked) for the zamba2 hybrid architecture.
+
+Training/prefill uses the chunked state-space-duality form (scan over
+sequence chunks, quadratic within a chunk, linear state hand-off across
+chunks).  Decode is the O(1) recurrent update.  The depthwise causal
+conv1d is the MEC conv hot-spot (repro.kernels.mec_conv1d on TPU;
+pure-jnp reference here so the dry-run HLO stays backend-portable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.mec import mec_conv1d_depthwise, mec_conv1d_shift
+from repro.models.layers import init_linear, linear, rms_norm
+from repro.parallel.axes import constrain
+
+
+def conv1d(cfg, x, w):
+    """MEC conv1d with the configured dataflow (DESIGN §2, §Perf)."""
+    fn = (mec_conv1d_shift if getattr(cfg, "conv_impl", "lowered") == "fused"
+          else mec_conv1d_depthwise)
+    return fn(x, w)
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, h, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # order: [z (d_in), xBC (d_in + 2n), dt (h)]
+        "in_proj": init_linear(k1, d, 2 * d_in + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": init_linear(k3, d_in, d, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, h, p_dim, n = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int = 128):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
+    b_mat/c_mat: (B, S, N) (single group, broadcast over heads).
+    Returns y (B, S, H, P) f32 and final state (B, H, P, N).
+    """
+    bsz, s, h, p_dim = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p_dim)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+    da = dtc * a[None, None, None, :]                   # (B, nc, c, H)
+
+    def step(state, inputs):
+        x_k, dt_k, da_k, b_k, c_k = inputs               # chunk leading
+        cs = jnp.cumsum(da_k, axis=1)                    # (B, c, H)
+        # intra-chunk causal decay L[i,j] = exp(cs_i - cs_j), j <= i
+        li = cs[:, :, None, :] - cs[:, None, :, :]       # (B, c, c, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        xdt = x_k * dt_k[..., None]                      # discrete input
+        y_diag = jnp.einsum("bln,bsn,blsh,bshp->blhp", c_k, b_k, decay, xdt,
+                            preferred_element_type=jnp.float32)
+        # contribution of incoming state
+        g = jnp.exp(cs)                                  # decay from chunk start
+        y_off = jnp.einsum("bln,blh,bhpn->blhp", c_k, g, state,
+                           preferred_element_type=jnp.float32)
+        # state update
+        tail = jnp.exp(cs[:, -1:, :] - cs)               # decay to chunk end
+        new_state = (state * jnp.exp(cs[:, -1, :])[..., None, None]
+                     + jnp.einsum("bsn,bsh,bshp->bhpn", b_k, tail, xdt,
+                                  preferred_element_type=jnp.float32))
+        return new_state, y_diag + y_off
+
+    state0 = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+                   for t in (xc, dtc, da, bc, cc))
+    state, yc = lax.scan(step, state0, inputs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, s, h, p_dim)
+    return y, state
+
+
+def mamba_core(p: dict, cfg, x: jnp.ndarray, chunk: int = 128):
+    """Full-sequence Mamba2 block. x (B, S, d) -> (out (B,S,d), cache)."""
+    d_in, h, p_dim, n = _dims(cfg)
+    zxbcdt = linear(x, p["in_proj"])
+    z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
+    xbc = constrain(xbc_raw, "batch", "seq", "conv_ch")
+    xbc = conv1d(cfg, xbc, p["conv_w"].astype(xbc.dtype))
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :d_in].reshape(*x.shape[:2], h, p_dim)
+    b_mat = xbc[..., d_in:d_in + n]
+    c_mat = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_chunked(xs.astype(jnp.float32), dt, a,
+                           b_mat.astype(jnp.float32),
+                           c_mat.astype(jnp.float32), chunk=chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    cache = {"state": state,
+             "conv": xbc_raw[:, x.shape[1] - (cfg.conv_width - 1):, :]}
+    return linear(y, p["out_proj"]), cache
+
+
+def mamba_forward(p: dict, cfg, x: jnp.ndarray,
+                  chunk: int = 128) -> jnp.ndarray:
+    return mamba_core(p, cfg, x, chunk)[0]
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    d_in, h, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, p_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent step. x (B, 1, d)."""
+    d_in, h, p_dim, n = _dims(cfg)
+    zxbcdt = linear(x, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt[:, 0], cfg)
+    # depthwise conv over (k_w-1 history, current)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc_c = jax.nn.silu(conv_out)
+    xs = xbc_c[..., :d_in].reshape(-1, h, p_dim)
+    b_vec = xbc_c[..., d_in:d_in + n]
+    c_vec = xbc_c[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a[None, :])                                  # (B, H)
+    state = (cache["state"] * da[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xs, b_vec))
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec)
+    y = y + xs * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, None, :],
+                 p["norm"], cfg.norm_eps)
+    new_cache = {"state": state, "conv": hist[:, 1:, :]}
+    return linear(y, p["out_proj"]), new_cache

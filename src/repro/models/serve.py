@@ -1,0 +1,364 @@
+"""Serving paths: prefill (build caches from a prompt) and single-token
+decode for every architecture family.  Caches are pytrees with layer-stacked
+leaves so the decode step scans over layers exactly like training does.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import mamba2, moe, xlstm
+from repro.models.layers import (attention_block, attention_decode,
+                                 decode_attention, linear, rms_norm, swiglu)
+from repro.models.lm import LM, dense_block, gelu_mlp, moe_block
+from repro.parallel.axes import constrain
+
+
+def _cache_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _kv_into(max_len: int, k: jnp.ndarray, v: jnp.ndarray):
+    """Embed prefill k/v (B,S,KV,D) into zero caches of length max_len."""
+    b, s, kv, d = k.shape
+    kc = jnp.zeros((b, max_len, kv, d), k.dtype).at[:, :s].set(k)
+    vc = jnp.zeros((b, max_len, kv, d), v.dtype).at[:, :s].set(v)
+    kc = constrain(kc, "batch", "seq_tp", "kv_heads", None)
+    vc = constrain(vc, "batch", "seq_tp", "kv_heads", None)
+    return kc, vc
+
+
+def _logits_last(model: LM, params, h):
+    """Last-position logits (B, V)."""
+    w = model.head_weights(params)
+    return jnp.einsum("bd,dv->bv", h[:, -1, :].astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def _logits_one(model: LM, params, h):
+    return _logits_last(model, params, h)
+
+
+# ---------------------------------------------------------------------------
+# dense / vlm / moe
+# ---------------------------------------------------------------------------
+
+def _attn_families_prefill(model: LM, params, batch, max_len: int):
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    h = model.embed(params, tokens)
+    if cfg.family == "vlm":
+        vis = linear(batch["vision"].astype(h.dtype), params["vision_proj"])
+        h = jnp.concatenate([vis, h], axis=1)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    is_moe = cfg.family == "moe"
+
+    def body(x, p):
+        if is_moe:
+            x2, kv, _ = moe_block(p, cfg, x, positions)
+        else:
+            x2, kv = dense_block(p, cfg, x, positions)
+        return x2, _kv_into(max_len, *kv)
+
+    h, (kc, vc) = lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    cache = {"k": kc, "v": vc, "len": jnp.asarray(s, jnp.int32)}
+    return _logits_last(model, params, h), cache
+
+
+def _attn_families_decode(model: LM, params, cache, tokens):
+    cfg = model.cfg
+    h = model.embed(params, tokens)          # (B, 1, d)
+    is_moe = cfg.family == "moe"
+    int8 = "k_s" in cache
+    ln = cache["len"]
+
+    def body(x, inputs):
+        if int8:
+            p, kc, vc, ks, vs = inputs
+            lcache = {"k": kc, "v": vc, "k_s": ks, "v_s": vs, "len": ln}
+        else:
+            p, kc, vc = inputs
+            lcache = {"k": kc, "v": vc, "len": ln}
+        xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new = attention_decode(p["attn"], cfg, xn, lcache)
+        x = x + a
+        xn2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if is_moe:
+            f, _ = moe.moe_ffn(p["moe"], cfg, xn2)
+        else:
+            f = swiglu(xn2, p["mlp"])
+        ys = ((new["k"], new["v"], new["k_s"], new["v_s"]) if int8
+              else (new["k"], new["v"]))
+        return x + f, ys
+
+    if int8:
+        xs = (params["blocks"], cache["k"], cache["v"], cache["k_s"],
+              cache["v_s"])
+        h, (kc, vc, ks, vs) = lax.scan(body, h, xs)
+        new_cache = {"k": kc, "v": vc, "k_s": ks, "v_s": vs, "len": ln + 1}
+    else:
+        h, (kc, vc) = lax.scan(body, h,
+                               (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": kc, "v": vc, "len": ln + 1}
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return _logits_one(model, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2)
+# ---------------------------------------------------------------------------
+
+def _hybrid_prefill(model: LM, params, batch, max_len: int):
+    cfg = model.cfg
+    h = model.embed(params, batch["tokens"])
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    n_super, tail = divmod(cfg.n_layers, cfg.attn_every)
+    norms = params["mamba_norms"][:n_super * cfg.attn_every].reshape(
+        n_super, cfg.attn_every, -1)
+
+    def mamba_step(x, pn):
+        p, nrm = pn
+        out, mc = mamba2.mamba_core(p, cfg, rms_norm(x, nrm, cfg.norm_eps))
+        return x + out, mc
+
+    def super_step(x, inputs):
+        p_group, nrm_group = inputs
+        x, mcaches = lax.scan(mamba_step, x, (p_group, nrm_group))
+        x, kv = dense_block(params["shared"], cfg, x, positions)
+        return x, (mcaches, _kv_into(max_len, *kv))
+
+    h, (mcaches, (kc, vc)) = lax.scan(super_step, h, (params["mamba"], norms))
+    tail_cache = None
+    if tail:
+        tail_norms = params["mamba_norms"][n_super * cfg.attn_every:]
+        h, tail_cache = lax.scan(mamba_step, h,
+                                 (params["mamba_tail"], tail_norms))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    cache = {"mamba": mcaches, "attn_k": kc, "attn_v": vc,
+             "tail": tail_cache, "len": jnp.asarray(s, jnp.int32)}
+    return _logits_last(model, params, h), cache
+
+
+def _hybrid_decode(model: LM, params, cache, tokens):
+    cfg = model.cfg
+    h = model.embed(params, tokens)
+    n_super, tail = divmod(cfg.n_layers, cfg.attn_every)
+    norms = params["mamba_norms"][:n_super * cfg.attn_every].reshape(
+        n_super, cfg.attn_every, -1)
+    ln = cache["len"]
+    shared = params["shared"]
+
+    def mamba_step(x, inputs):
+        p, nrm, mc = inputs
+        out, mc2 = mamba2.mamba_decode(p, cfg, rms_norm(x, nrm, cfg.norm_eps),
+                                       mc)
+        return x + out, mc2
+
+    def super_step(x, inputs):
+        p_group, nrm_group, mc_group, kc, vc = inputs
+        x, mc_new = lax.scan(mamba_step, x, (p_group, nrm_group, mc_group))
+        xn = rms_norm(x, shared["norm1"], cfg.norm_eps)
+        a, new = attention_decode(shared["attn"], cfg, xn,
+                                  {"k": kc, "v": vc, "len": ln})
+        x = x + a
+        x = x + swiglu(rms_norm(x, shared["norm2"], cfg.norm_eps),
+                       shared["mlp"])
+        return x, (mc_new, new["k"], new["v"])
+
+    h, (mc_new, kc, vc) = lax.scan(
+        super_step, h,
+        (params["mamba"], norms, cache["mamba"], cache["attn_k"],
+         cache["attn_v"]))
+    tail_cache = cache["tail"]
+    if tail:
+        tail_norms = params["mamba_norms"][n_super * cfg.attn_every:]
+        h, tail_cache = lax.scan(
+            mamba_step, h, (params["mamba_tail"], tail_norms, cache["tail"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    new_cache = {"mamba": mc_new, "attn_k": kc, "attn_v": vc,
+                 "tail": tail_cache, "len": ln + 1}
+    return _logits_one(model, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# ssm (xLSTM)
+# ---------------------------------------------------------------------------
+
+def _ssm_prefill(model: LM, params, batch, max_len: int):
+    cfg = model.cfg
+    h = model.embed(params, batch["tokens"])
+
+    def m_step(x, p):
+        out, c = xlstm.mlstm_prefill(p, cfg, x)
+        return x + out, c
+
+    def super_step(x, inputs):
+        p_m, p_s = inputs
+        x, mc = lax.scan(m_step, x, p_m)
+        out, sc = xlstm.slstm_core(p_s, cfg, x)
+        return x + out, (mc, sc)
+
+    h, (mc, sc) = lax.scan(super_step, h, (params["mlstm"], params["slstm"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    cache = {"mlstm": mc, "slstm": sc,
+             "len": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+    return _logits_last(model, params, h), cache
+
+
+def _ssm_decode(model: LM, params, cache, tokens):
+    cfg = model.cfg
+    h = model.embed(params, tokens)
+
+    def m_step(x, inputs):
+        p, c = inputs
+        out, c2 = xlstm.mlstm_decode(p, cfg, x, c)
+        return x + out, c2
+
+    def super_step(x, inputs):
+        p_m, p_s, mc, sc = inputs
+        x, mc2 = lax.scan(m_step, x, (p_m, mc))
+        out, sc2 = xlstm.slstm_decode(p_s, cfg, x, sc)
+        return x + out, (mc2, sc2)
+
+    h, (mc, sc) = lax.scan(
+        super_step, h,
+        (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return (_logits_one(model, params, h),
+            {"mlstm": mc, "slstm": sc, "len": cache["len"] + 1})
+
+
+# ---------------------------------------------------------------------------
+# audio (whisper enc-dec)
+# ---------------------------------------------------------------------------
+
+def _audio_prefill(model: LM, params, batch, max_len: int):
+    cfg = model.cfg
+    enc = model.encode(params, batch["frames"])
+    h = model.embed(params, batch["tokens"])
+    s = h.shape[1]
+    positions = jnp.arange(s)
+
+    def body(x, p):
+        x2, kv = model._dec_block(p, x, positions, None, enc)
+        ck, cv = model._cross_kv(p, enc)
+        return x2, (_kv_into(max_len, *kv), (ck, cv))
+
+    h, ((kc, vc), (ck, cv)) = lax.scan(body, h, params["dec_blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    cache = {"k": kc, "v": vc, "cross_k": ck, "cross_v": cv,
+             "len": jnp.asarray(s, jnp.int32)}
+    return _logits_last(model, params, h), cache
+
+
+def _audio_decode(model: LM, params, cache, tokens):
+    cfg = model.cfg
+    h = model.embed(params, tokens)
+    ln = cache["len"]
+
+    def body(x, inputs):
+        p, kc, vc, ck, cv = inputs
+        xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new = attention_decode(p["attn"], cfg, xn,
+                                  {"k": kc, "v": vc, "len": ln})
+        x = x + a
+        # cross-attention against the static encoder cache
+        xn = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        b = x.shape[0]
+        q = linear(xn, p["xattn"]["wq"]).reshape(b, 1, cfg.n_heads,
+                                                 cfg.head_dim)
+        xa = decode_attention(q, ck, cv, ck.shape[1])
+        xa = linear(xa.reshape(b, 1, cfg.n_heads * cfg.head_dim),
+                    p["xattn"]["wo"])
+        x = x + xa
+        x = x + gelu_mlp(rms_norm(x, p["norm2"], cfg.norm_eps), p["mlp"])
+        return x, (new["k"], new["v"])
+
+    h, (kc, vc) = lax.scan(
+        body, h, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    new_cache = dict(cache, k=kc, v=vc, len=ln + 1)
+    return _logits_one(model, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+_PREFILL = {"dense": _attn_families_prefill, "vlm": _attn_families_prefill,
+            "moe": _attn_families_prefill, "hybrid": _hybrid_prefill,
+            "ssm": _ssm_prefill, "audio": _audio_prefill}
+_DECODE = {"dense": _attn_families_decode, "vlm": _attn_families_decode,
+           "moe": _attn_families_decode, "hybrid": _hybrid_decode,
+           "ssm": _ssm_decode, "audio": _audio_decode}
+
+
+def prefill(model: LM, params, batch, max_len: int):
+    """-> (last-token logits (B, V), cache)."""
+    return _PREFILL[model.cfg.family](model, params, batch, max_len)
+
+
+def decode_step(model: LM, params, cache, tokens):
+    """tokens (B, 1) -> (logits (B, V), new cache)."""
+    return _DECODE[model.cfg.family](model, params, cache, tokens)
+
+
+def init_decode_cache(model: LM, batch: int, max_len: int):
+    """Zero caches for decode-only benchmarking (no prefill)."""
+    cfg = model.cfg
+    dt = _cache_dtype(cfg)
+    hd = cfg.head_dim
+    fam = cfg.family
+
+    def kv(n_layers, length):
+        return (jnp.zeros((n_layers, batch, length, cfg.n_kv_heads, hd), dt),
+                jnp.zeros((n_layers, batch, length, cfg.n_kv_heads, hd), dt))
+
+    if fam in ("dense", "vlm", "moe"):
+        if getattr(cfg, "kv_cache_int8", False):
+            shp = (cfg.n_layers, batch, max_len, cfg.n_kv_heads)
+            return {"k": jnp.zeros(shp + (hd,), jnp.int8),
+                    "v": jnp.zeros(shp + (hd,), jnp.int8),
+                    "k_s": jnp.zeros(shp + (1,), jnp.bfloat16),
+                    "v_s": jnp.zeros(shp + (1,), jnp.bfloat16),
+                    "len": jnp.asarray(max_len - 1, jnp.int32)}
+        k, v = kv(cfg.n_layers, max_len)
+        return {"k": k, "v": v, "len": jnp.asarray(max_len - 1, jnp.int32)}
+    if fam == "hybrid":
+        n_super, tail = divmod(cfg.n_layers, cfg.attn_every)
+        mc = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super, cfg.attn_every) + x.shape),
+            mamba2.init_mamba_cache(cfg, batch, dt))
+        k, v = kv(n_super, max_len)
+        tail_c = None
+        if tail:
+            tail_c = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (tail,) + x.shape),
+                mamba2.init_mamba_cache(cfg, batch, dt))
+        return {"mamba": mc, "attn_k": k, "attn_v": v, "tail": tail_c,
+                "len": jnp.asarray(max_len - 1, jnp.int32)}
+    if fam == "ssm":
+        n_super = cfg.n_layers // cfg.slstm_every
+        k_m = cfg.slstm_every - 1
+        mc = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super, k_m) + x.shape),
+            xlstm.init_mlstm_cache(cfg, batch))
+        sc = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super,) + x.shape),
+            xlstm.init_slstm_cache(cfg, batch))
+        return {"mlstm": mc, "slstm": sc,
+                "len": jnp.asarray(max_len - 1, jnp.int32)}
+    if fam == "audio":
+        k, v = kv(cfg.n_layers, max_len)
+        ck = jnp.zeros((cfg.n_layers, batch, cfg.encoder_len,
+                        cfg.n_kv_heads, hd), dt)
+        return {"k": k, "v": v, "cross_k": ck, "cross_v": ck,
+                "len": jnp.asarray(max_len - 1, jnp.int32)}
+    raise ValueError(fam)

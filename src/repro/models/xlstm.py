@@ -1,0 +1,286 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM training uses the stabilized parallel (quadratic) form, chunked over
+queries; decode is the O(1) matrix-memory update.  sLSTM is an exponential-
+gated recurrent scan with head-wise block-diagonal recurrence.  Both carry
+a causal depthwise conv1d pre-activation — the MEC conv1d hot-spot.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.mec import mec_conv1d_depthwise
+from repro.models.mamba2 import conv1d
+from repro.models.layers import init_linear, linear, rms_norm
+
+_NEG = -1e30
+
+
+def _dims(cfg):
+    d_in = 2 * cfg.d_model
+    h = cfg.n_heads
+    p = d_in // h
+    return d_in, h, p
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, h, p = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_linear(ks[0], d, 2 * d_in, dtype),        # x_in, z gate
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_in),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "wq": init_linear(ks[2], d_in, d_in, dtype),
+        "wk": init_linear(ks[3], d_in, d_in, dtype),
+        "wv": init_linear(ks[4], d_in, d_in, dtype),
+        "wif": init_linear(ks[5], d_in, 2 * h, dtype, bias=True),
+        "norm": jnp.ones((d_in,), dtype),
+        "down": init_linear(ks[6], d_in, d, dtype),
+    }
+
+
+def _mlstm_gates(p, xc, cfg):
+    d_in, h, _ = _dims(cfg)
+    g = linear(xc, p["wif"]).astype(jnp.float32)     # (B, S, 2H)
+    log_i = g[..., :h]
+    log_f = jax.nn.log_sigmoid(g[..., h:] + 3.0)     # bias toward remember
+    return log_i, log_f
+
+
+def mlstm_parallel(q, k, v, log_i, log_f, q_chunk: int = 256):
+    """Stabilized parallel mLSTM.
+
+    q,k,v: (B, S, H, P); log_i/log_f: (B, S, H).
+    D[i,j] = F_i - F_j + I_j (j <= i), F = cumsum(log_f).
+    h_t = (sum_j exp(D[t,j] - m_t) q_t.k_j v_j) / max(|den|, exp(-m_t)).
+    """
+    b, s, h, p = q.shape
+    q_chunk = min(q_chunk, s)
+    pad = (-s) % q_chunk
+    f_cum = jnp.cumsum(log_f, axis=1)                       # (B, S, H)
+    scale = p ** -0.5
+    kt = k.astype(jnp.float32) * scale
+    vt = v.astype(jnp.float32)
+    bias_k = (log_i - f_cum)                                # I_j - F_j
+    nq = (s + pad) // q_chunk
+
+    def q_step(iq):
+        sl = lambda t: lax.dynamic_slice_in_dim(t, iq * q_chunk, q_chunk, axis=1)
+        q_i = sl(q).astype(jnp.float32)                     # (B, c, H, P)
+        f_i = sl(f_cum)                                     # (B, c, H)
+        scores = jnp.einsum("bthp,bshp->bhts", q_i, kt)     # (B, H, c, S)
+        dmat = (f_i.transpose(0, 2, 1)[:, :, :, None]
+                + bias_k.transpose(0, 2, 1)[:, :, None, :])  # (B,H,c,S)
+        qpos = iq * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.arange(s)[None, :] <= qpos[:, None]
+        dmat = jnp.where(mask[None, None], dmat, _NEG)
+        m = jnp.maximum(dmat.max(axis=-1), -p * 10.0)       # (B, H, c)
+        w = jnp.exp(dmat - m[..., None]) * scores
+        den = jnp.maximum(jnp.abs(w.sum(-1)), jnp.exp(-m))  # (B, H, c)
+        out = jnp.einsum("bhts,bshp->bthp", w, vt) / den.transpose(0, 2, 1)[..., None]
+        return out                                          # (B, c, H, P)
+
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        f_cum = jnp.pad(f_cum, ((0, 0), (0, pad), (0, 0)))
+    out = lax.map(q_step, jnp.arange(nq))                   # (nq, B, c, H, P)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s + pad, h, p)[:, :s]
+    return out
+
+
+def mlstm_forward(p: dict, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    d_in, h, pd = _dims(cfg)
+    up = linear(x, p["up"])
+    x_in, z = up[..., :d_in], up[..., d_in:]
+    xc = conv1d(cfg, x_in, p["conv_w"].astype(x_in.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    b, s, _ = x.shape
+    q = linear(xc, p["wq"]).reshape(b, s, h, pd)
+    k = linear(xc, p["wk"]).reshape(b, s, h, pd)
+    v = linear(x_in, p["wv"]).reshape(b, s, h, pd)
+    log_i, log_f = _mlstm_gates(p, xc, cfg)
+    out = mlstm_parallel(q, k, v, log_i, log_f, q_chunk=cfg.q_chunk)
+    out = out.reshape(b, s, d_in).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return linear(out, p["down"])
+
+
+def mlstm_prefill(p: dict, cfg, x: jnp.ndarray):
+    """Forward over a full sequence AND build the decode cache.
+
+    The recurrent state after S tokens has the closed form
+      m = max(F_S, max_j (F_S - F_j + I_j))
+      C = sum_j exp(F_S - F_j + I_j - m) k_j v_j^T,   n likewise.
+    """
+    d_in, h, pd = _dims(cfg)
+    b, s, _ = x.shape
+    up = linear(x, p["up"])
+    x_in, z = up[..., :d_in], up[..., d_in:]
+    xc = conv1d(cfg, x_in, p["conv_w"].astype(x_in.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = linear(xc, p["wq"]).reshape(b, s, h, pd)
+    k = linear(xc, p["wk"]).reshape(b, s, h, pd)
+    v = linear(x_in, p["wv"]).reshape(b, s, h, pd)
+    log_i, log_f = _mlstm_gates(p, xc, cfg)
+    out = mlstm_parallel(q, k, v, log_i, log_f, q_chunk=cfg.q_chunk)
+    # closed-form final state
+    f_cum = jnp.cumsum(log_f, axis=1)                       # (B, S, H)
+    f_s = f_cum[:, -1, :]                                   # (B, H)
+    bias = f_s[:, None, :] - f_cum + log_i                  # (B, S, H)
+    m = jnp.maximum(f_s, bias.max(axis=1))                  # (B, H)
+    w = jnp.exp(bias - m[:, None, :])                       # (B, S, H)
+    kf = k.astype(jnp.float32) * pd ** -0.5
+    c_state = jnp.einsum("bsh,bshp,bsho->bhpo", w, kf, v.astype(jnp.float32))
+    n_state = jnp.einsum("bsh,bshp->bhp", w, kf)
+    conv = x_in[:, s - (cfg.conv_width - 1):, :].astype(jnp.float32)
+    cache = {"c": c_state, "n": n_state, "m": m, "conv": conv}
+    out = out.reshape(b, s, d_in).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return linear(out, p["down"]), cache
+
+
+def init_mlstm_cache(cfg, batch: int) -> dict:
+    d_in, h, pd = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, pd, pd), jnp.float32),   # matrix memory
+        "n": jnp.zeros((batch, h, pd), jnp.float32),
+        "m": jnp.full((batch, h), 0.0, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), jnp.float32),
+    }
+
+
+def mlstm_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
+                 ) -> Tuple[jnp.ndarray, dict]:
+    d_in, h, pd = _dims(cfg)
+    b = x.shape[0]
+    up = linear(x[:, 0], p["up"])
+    x_in, z = up[..., :d_in], up[..., d_in:]
+    hist = jnp.concatenate(
+        [cache["conv"], x_in[:, None, :].astype(jnp.float32)], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist,
+                                p["conv_w"].astype(jnp.float32)))
+    xc = xc.astype(x.dtype)
+    q = linear(xc, p["wq"]).reshape(b, h, pd).astype(jnp.float32)
+    k = linear(xc, p["wk"]).reshape(b, h, pd).astype(jnp.float32) * pd ** -0.5
+    v = linear(x_in[:, None].astype(x.dtype), p["wv"])[:, 0].reshape(b, h, pd).astype(jnp.float32)
+    g = linear(xc, p["wif"]).astype(jnp.float32)
+    log_i = g[..., :h].reshape(b, h)
+    log_f = jax.nn.log_sigmoid(g[..., h:].reshape(b, h) + 3.0)
+    m_new = jnp.maximum(log_f + cache["m"], log_i)
+    fw = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    iw = jnp.exp(log_i - m_new)[..., None]
+    c_new = cache["c"] * fw[..., None] + iw[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = cache["n"] * fw + iw * k
+    num = jnp.einsum("bhp,bhpo->bho", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)),
+                      jnp.exp(-m_new))[..., None]
+    out = (num / den).reshape(b, d_in).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    new_cache = {"c": c_new, "n": n_new, "m": m_new, "conv": hist[:, 1:, :]}
+    return linear(out, p["down"])[:, None, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, h, pd = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "up": init_linear(ks[0], d, d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_in),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "w_gates": init_linear(ks[2], d_in, 4 * d_in, dtype, bias=True),
+        # head-wise block-diagonal recurrence: h (H, P) -> gates (H, 4P)
+        "r_gates": (jax.random.normal(ks[3], (h, 4 * pd, pd), jnp.float32)
+                    * pd ** -0.5).astype(dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "down": init_linear(ks[4], d_in, d, dtype),
+    }
+
+
+def _slstm_cell(p, cfg, xg, state):
+    """One sLSTM step. xg: (B, 4*d_in) pre-activations from the input path."""
+    d_in, h, pd = _dims(cfg)
+    c, n, m, h_prev = state
+    rec = jnp.einsum("bhp,hqp->bhq", h_prev, p["r_gates"].astype(jnp.float32))
+    g = xg.reshape(-1, h, 4 * pd).astype(jnp.float32) + rec
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)            # (B, H, P) each
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    log_i = ii
+    log_f = jax.nn.log_sigmoid(fi + 3.0)
+    m_new = jnp.maximum(log_f + m, log_i)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * z
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_core(p: dict, cfg, x: jnp.ndarray):
+    d_in, h, pd = _dims(cfg)
+    b, s, _ = x.shape
+    x_in = linear(x, p["up"])
+    xc = conv1d(cfg, x_in, p["conv_w"].astype(x_in.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    xg = linear(xc, p["w_gates"])                         # (B, S, 4*d_in)
+    state0 = tuple(jnp.zeros((b, h, pd), jnp.float32) for _ in range(4))
+
+    def step(state, xg_t):
+        return _slstm_cell(p, cfg, xg_t, state)
+
+    state, hs = lax.scan(step, state0, jnp.moveaxis(xg, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(b, s, d_in).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps)
+    cache = {"c": state[0], "n": state[1], "m": state[2], "h": state[3],
+             "conv": x_in[:, s - (cfg.conv_width - 1):, :].astype(jnp.float32)}
+    return linear(out, p["down"]), cache
+
+
+def slstm_forward(p: dict, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    return slstm_core(p, cfg, x)[0]
+
+
+def init_slstm_cache(cfg, batch: int) -> dict:
+    d_in, h, pd = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, pd), jnp.float32),
+        "n": jnp.zeros((batch, h, pd), jnp.float32),
+        "m": jnp.zeros((batch, h, pd), jnp.float32),
+        "h": jnp.zeros((batch, h, pd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), jnp.float32),
+    }
+
+
+def slstm_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
+                 ) -> Tuple[jnp.ndarray, dict]:
+    d_in, h, pd = _dims(cfg)
+    b = x.shape[0]
+    x_in = linear(x[:, 0], p["up"])
+    hist = jnp.concatenate(
+        [cache["conv"], x_in[:, None, :].astype(jnp.float32)], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist,
+                                p["conv_w"].astype(jnp.float32))).astype(x.dtype)
+    xg = linear(xc, p["w_gates"])
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    state_new, h_new = _slstm_cell(p, cfg, xg, state)
+    out = h_new.reshape(b, d_in).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps)
+    new_cache = {"c": state_new[0], "n": state_new[1], "m": state_new[2],
+                 "h": state_new[3], "conv": hist[:, 1:, :]}
+    return linear(out, p["down"])[:, None, :], new_cache

@@ -1,0 +1,82 @@
+"""Logical-axis sharding: model code names activation/parameter axes
+logically ("batch", "seq", "tp", "expert", ...) and the launcher installs a
+rule set mapping them to mesh axes.  Outside any mesh (unit tests, CPU
+smokes) every annotation is a no-op, so the same model code runs
+everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    # logical name -> mesh axis (str), tuple of mesh axes, or None (replicate)
+    rules: dict
+    dp_axes: Tuple[str, ...] = ("data",)   # gradient/psum axes
+    ep_axis: Optional[str] = "model"       # expert-parallel a2a axis
+    tp_axis: Optional[str] = "model"
+
+    def spec(self, logical_axes) -> P:
+        return P(*(self.rules.get(a) if a is not None else None
+                   for a in logical_axes))
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, *logical_axes):
+    """Annotate activation sharding; no-op when no rules are installed."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(logical_axes)))
+
+
+# Default logical->mesh mapping for the production mesh (DESIGN.md §6).
+def default_rules(mesh: Mesh) -> ShardingRules:
+    axis_names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axis_names)
+    tp = "model" if "model" in axis_names else None
+    return ShardingRules(
+        mesh=mesh,
+        rules={
+            "batch": dp if len(dp) > 1 else (dp[0] if dp else None),
+            "seq": None,
+            "seq_tp": tp,       # sequence-parallel regions (MoE SP, KV cache)
+            "embed": None,
+            "heads": tp,
+            "kv_heads": None,   # kv heads may not divide tp; replicate
+            "head_dim": None,
+            "ffn": tp,
+            "expert": tp,
+            "vocab": tp,
+            "conv_ch": tp,
+            "zero": dp if len(dp) > 1 else (dp[0] if dp else None),
+        },
+        dp_axes=dp,
+        ep_axis=tp,
+        tp_axis=tp,
+    )

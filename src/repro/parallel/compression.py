@@ -1,0 +1,60 @@
+"""Gradient compression: int8 quantized DP all-reduce with error feedback.
+
+Owns the data-parallel gradient reduction (so it must run inside a
+shard_map over the DP axes, where per-shard gradients are visible before
+reduction).  Each leaf is quantized to int8 with a per-leaf scale; the
+quantization error is carried in an error-feedback buffer folded into the
+next step's gradient — the standard convergence-preserving trick.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, ef, dp_axes: Tuple[str, ...]):
+    """grads/ef: local f32 trees.  Returns (reduced grads, new ef).
+
+    The wire carries int8 values (+ one f32 scale per leaf per shard):
+    an all_gather of int8 moves 1 byte/element vs the 8 bytes/element a
+    ring f32 all-reduce moves — the reduction itself happens locally as a
+    scale-weighted sum of the gathered shards (each shard has its own
+    quantization scale, so the sum is exact in the quantized domain).
+    """
+    n = 1
+    for ax in dp_axes:
+        n *= lax.psum(1, ax)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = quantize(g)
+        gathered = lax.all_gather(q, dp_axes)               # (n, ...) int8
+        scales = lax.all_gather(scale, dp_axes)             # (n,) f32
+        summed = jnp.tensordot(scales, gathered.astype(jnp.float32),
+                               axes=(0, 0))
+        new_e = g - dequantize(q, scale)
+        return summed / n, new_e
+
+    out = jax.tree.map(one, grads, ef)
+    reduced = jax.tree.map(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, new_ef
+
+
+def init_ef(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

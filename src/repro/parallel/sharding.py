@@ -1,0 +1,152 @@
+"""Parameter/optimizer/cache sharding: name-based rules + divisibility
+fallback, and ZeRO-1 sharding of the optimizer moments.
+
+Rules map parameter *path names* to logical column/row roles; any mesh
+axis that does not divide the corresponding dimension is dropped
+(replicated), which transparently handles e.g. kv_heads=8 on a model=16
+axis or layer-stacked leading dims.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex over '/'-joined path) -> spec for the LAST ndim dims of the leaf.
+# Leading (layer-stack) dims are padded with None.
+_PARAM_RULES = [
+    (r"emb$",                         ("model", None)),       # (V, d) vocab-sharded
+    (r"lm_head/w$",                   (None, "model")),
+    (r"vision_proj/w$",               (None, "model")),
+    (r"(wq|wk|wv)/w$",                (None, "model")),
+    (r"wo/w$",                        ("model", None)),
+    (r"(gate|up)/w$",                 (None, "model")),
+    (r"down/w$",                      ("model", None)),
+    (r"moe/router$",                  (None, None)),
+    (r"moe/(wg|wu|wd)$",              ("model", None, None)),  # experts
+    (r"shared/(wg|wu|wd)$",           ("model", None, None)),
+    (r"in_proj/w$",                   (None, "model")),
+    (r"out_proj/w$",                  ("model", None)),
+    (r"conv_w$",                      (None, "model")),
+    (r"w_gates/w$",                   (None, "model")),
+    (r"r_gates$",                     ("model", None, None)),
+    (r"(wif)/w$",                     (None, None)),
+    (r"/b$",                          (None,)),                # biases replicated
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _fit(spec_tail: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Pad the rule to ndim and drop axes that don't divide the dim."""
+    ndim = len(shape)
+    tail = list(spec_tail)[-ndim:]
+    full = [None] * (ndim - len(tail)) + tail
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None:
+            out.append(None)
+        else:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a not in sizes for a in axes):   # axis absent on this mesh
+                out.append(None)
+                continue
+            prod = int(np.prod([sizes[a] for a in axes]))
+            out.append(ax if dim % prod == 0 else None)
+    return P(*out)
+
+
+def param_specs(params_shapes, mesh: Mesh):
+    """Tree of PartitionSpec matching a tree of ShapeDtypeStruct/arrays."""
+
+    def one(path, leaf):
+        name = _path_str(path)
+        for pat, tail in _PARAM_RULES:
+            if re.search(pat, name):
+                return _fit(tail, leaf.shape, mesh)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def zero1_specs(param_spec_tree, params_shapes, mesh: Mesh,
+                zero_axes: Tuple[str, ...] = ("data",)):
+    """ZeRO-1: shard optimizer moments over the DP axes too.
+
+    For each leaf, find the first dimension that is unsharded in the param
+    spec and divisible by the DP axis product; shard it over zero_axes.
+    Leaves with no eligible dim keep the param spec (replicated moments).
+    """
+    sizes = dict(mesh.shape)
+    dp = int(np.prod([sizes[a] for a in zero_axes])) if zero_axes else 1
+
+    def one(spec: P, leaf):
+        if dp <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (dim, ax) in enumerate(zip(leaf.shape, parts)):
+            if ax is None and dim % dp == 0 and dim > 0:
+                parts[i] = zero_axes if len(zero_axes) > 1 else zero_axes[0]
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, param_spec_tree, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree, params_shapes, mesh: Mesh,
+                    zero_axes=("data",)):
+    z = zero1_specs(param_spec_tree, params_shapes, mesh, zero_axes)
+    return {"m": z, "v": z, "step": P()}
+
+
+def cache_specs(cache_shapes, mesh: Mesh, rules) -> Any:
+    """KV/state caches: batch over DP, seq over model where divisible."""
+    sizes = dict(mesh.shape)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name.endswith("len") or nd == 0:
+            return P()
+        # layer-stacked KV caches: (..., B, S, KV, D)
+        if re.search(r"(attn_k|attn_v|cross_k|cross_v|/k|/v|/k_s|/v_s)$", name) and nd >= 4:
+            spec = [None] * nd
+            b_dim, s_dim = nd - 4, nd - 3
+            batch_ax = rules.rules.get("batch")
+            seq_ax = rules.rules.get("seq_tp")
+            if batch_ax is not None:
+                axes = (batch_ax,) if isinstance(batch_ax, str) else tuple(batch_ax)
+                if leaf.shape[b_dim] % int(np.prod([sizes[a] for a in axes])) == 0:
+                    spec[b_dim] = batch_ax
+            if seq_ax is not None and leaf.shape[s_dim] % sizes[seq_ax] == 0:
+                spec[s_dim] = seq_ax
+            return P(*spec)
+        # recurrent states: (..., B, ...) — batch on the dim matching known B
+        batch_ax = rules.rules.get("batch")
+        if batch_ax is not None:
+            axes = (batch_ax,) if isinstance(batch_ax, str) else tuple(batch_ax)
+            prod = int(np.prod([sizes[a] for a in axes]))
+            spec = [None] * nd
+            for i, dim in enumerate(leaf.shape):
+                if dim % prod == 0 and dim >= prod and i < nd - 1:
+                    spec[i] = batch_ax
+                    return P(*spec)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

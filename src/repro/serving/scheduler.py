@@ -1,0 +1,179 @@
+"""Continuous batching for LM serving (dense/vlm families).
+
+A fixed pool of B slots shares one layer-stacked KV cache with *per-slot*
+lengths; requests stream in, prefill writes a finished prompt's KV into a
+free slot, and every decode step advances all live slots at once —
+the vLLM-style scheduler loop, sized down to this framework's cache
+layout (contiguous per-slot regions rather than paged blocks; paging is
+the documented next step).
+
+Components:
+* ``batched_decode_step`` — one token for every slot, per-slot lengths
+  (vectorized scatter into the caches + per-slot causal masks).
+* ``insert_prefill``     — scatter a (1, S, ...) prefill cache into slot b.
+* ``ContinuousBatcher``  — the Python-side queue/slot manager (admission,
+  completion by EOS or max_new_tokens, slot recycling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import serve
+from repro.models.layers import decode_attention, linear, rms_norm, swiglu
+from repro.models.lm import LM
+
+
+# ---------------------------------------------------------------------------
+# per-slot-length decode (dense/vlm)
+# ---------------------------------------------------------------------------
+
+def _attn_decode_multi(p, cfg, x, kc, vc, lens):
+    """x (B,1,d); kc/vc (B,Smax,KV,hd); lens (B,) per-slot lengths."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    from repro.models.layers import attention_qkv
+    q, k, v = attention_qkv(p, cfg, x, None, use_rope=False)
+    # RoPE at each slot's own position
+    from repro.models.layers import rope_cos_sin, apply_rope
+
+    def rope_one(qi, ki, pos):
+        cos, sin = rope_cos_sin(pos[None], hd, cfg.rope_theta)
+        return apply_rope(qi[None], cos, sin)[0], \
+            apply_rope(ki[None], cos, sin)[0]
+
+    q, k = jax.vmap(rope_one)(q, k, lens)
+    kc = kc.at[jnp.arange(b), lens].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[jnp.arange(b), lens].set(v[:, 0].astype(vc.dtype))
+    out = decode_attention(q, kc, vc, (lens + 1)[:, None])
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return linear(out, p["wo"]), kc, vc
+
+
+def batched_decode_step(model: LM, params, cache: Dict, tokens: jnp.ndarray):
+    """tokens (B,1); cache {k,v: (L,B,Smax,KV,hd), lens: (B,)}.
+
+    Returns (logits (B,V), new cache) with every slot advanced by one.
+    Dead slots (lens < 0) still compute but their writes go to row 0 of a
+    scratch region — callers mask them out.
+    """
+    cfg = model.cfg
+    lens = jnp.maximum(cache["lens"], 0)
+    h = model.embed(params, tokens)
+
+    def body(x, inputs):
+        p, kc, vc = inputs
+        xn = rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, kc, vc = _attn_decode_multi(p["attn"], cfg, xn, kc, vc, lens)
+        x = x + a
+        f = swiglu(rms_norm(x, p["norm2"], cfg.norm_eps), p["mlp"])
+        return x + f, (kc, vc)
+
+    h, (kc, vc) = lax.scan(body, h, (params["blocks"], cache["k"],
+                                     cache["v"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = model.head_weights(params)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                        w.astype(jnp.float32))
+    return logits, {"k": kc, "v": vc, "lens": cache["lens"] + 1}
+
+
+def insert_prefill(cache: Dict, slot: int, pre_cache: Dict) -> Dict:
+    """Scatter a batch-1 prefill cache (from serve.prefill) into a slot."""
+    s = pre_cache["k"].shape[2]
+    k = cache["k"].at[:, slot, :s].set(pre_cache["k"][:, 0, :s])
+    v = cache["v"].at[:, slot, :s].set(pre_cache["v"][:, 0, :s])
+    lens = cache["lens"].at[slot].set(pre_cache["len"])
+    return {"k": k, "v": v, "lens": lens}
+
+
+def init_pool(model: LM, n_slots: int, max_len: int) -> Dict:
+    cfg = model.cfg
+    hd = cfg.head_dim
+    shp = (cfg.n_layers, n_slots, max_len, cfg.n_kv_heads, hd)
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt),
+            "lens": jnp.full((n_slots,), -1, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+
+class ContinuousBatcher:
+    def __init__(self, model: LM, params, n_slots: int = 4,
+                 max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = init_pool(model, n_slots, max_len)
+        self.queue: deque = deque()
+        self.live: Dict[int, Request] = {}
+        self.done: List[Request] = []
+        self._next_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, t: batched_decode_step(model, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b: serve.prefill(model, p, b, max_len))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.n_slots) if s not in
+                {r.slot for r in self.live.values()}]
+        while free and self.queue:
+            req = self.queue.popleft()
+            slot = free.pop(0)
+            logits, pre = self._prefill(self.params,
+                                        {"tokens": req.prompt[None]})
+            self.cache = insert_prefill(self.cache, slot, pre)
+            tok = int(jnp.argmax(logits[0]))
+            req.slot = slot
+            req.out.append(tok)
+            self._next_tok = self._next_tok.at[slot, 0].set(tok)
+            self.live[req.rid] = req
+
+    def step(self) -> None:
+        """One scheduler tick: admit waiting requests, decode all live."""
+        self._admit()
+        if not self.live:
+            return
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self._next_tok)
+        toks = jnp.argmax(logits, axis=-1)
+        finished = []
+        for rid, req in self.live.items():
+            tok = int(toks[req.slot])
+            req.out.append(tok)
+            self._next_tok = self._next_tok.at[req.slot, 0].set(tok)
+            if (len(req.out) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                finished.append(rid)
+        for rid in finished:
+            req = self.live.pop(rid)
+            self.cache["lens"] = self.cache["lens"].at[req.slot].set(-1)
+            self.done.append(req)
+
+    def run_until_done(self, max_ticks: int = 1000) -> List[Request]:
+        ticks = 0
+        while (self.queue or self.live) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done

@@ -1,0 +1,51 @@
+"""Sequence-chunked softmax cross-entropy.
+
+Materializing (B, S, V) f32 logits for a 152k vocab costs ~10 GB per
+device at our shapes, so the loss scans over sequence chunks: each chunk
+projects (B, c, d) -> (B, c, V) (vocab-sharded under TP), reduces, and
+discards.  Gradients flow through the scan; peak memory is one chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_softmax_xent(h: jnp.ndarray, w_head: jnp.ndarray,
+                         labels: jnp.ndarray, chunk: int = 512,
+                         z_loss: float = 1e-4):
+    """h (B, S, d); w_head (d, V); labels (B, S) int32 (-1 = ignore).
+
+    Returns (mean_nll, metrics dict).
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hc = h.reshape(b, nc, chunk, d).swapaxes(0, 1)        # (nc, B, c, d)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def step(carry, inputs):
+        nll_sum, z_sum, n_tok = carry
+        h_i, l_i = inputs
+        logits = jnp.einsum("bcd,dv->bcv", h_i.astype(jnp.float32),
+                            w_head.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)           # (B, c)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_i, 0)[..., None], axis=-1)[..., 0]
+        valid = (l_i >= 0).astype(jnp.float32)
+        nll_sum = nll_sum + jnp.sum((lse - gold) * valid)
+        z_sum = z_sum + jnp.sum(jnp.square(lse) * valid)
+        return (nll_sum, z_sum, n_tok + valid.sum()), None
+
+    init = (jnp.zeros((), jnp.float32),) * 3
+    (nll, z, n), _ = lax.scan(step, init, (hc, lc))
+    n = jnp.maximum(n, 1.0)
+    loss = nll / n + z_loss * z / n
+    return loss, {"nll": nll / n, "tokens": n}

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run owns the 512-device flag; it is
+# exercised via subprocess in test_dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

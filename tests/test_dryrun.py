@@ -1,0 +1,96 @@
+"""Dry-run machinery: HLO collective parser units + one real 512-device
+lower/compile in a subprocess (the full 64-cell sweep is run via
+``python -m repro.launch.dryrun --all --both-meshes``; its outputs live in
+results/dryrun/ and are checked here if present)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.hlo_analysis import (collective_bytes, roofline_terms,
+                                       PEAK_FLOPS, HBM_BW, ICI_BW)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_collective_parser_counts_bytes():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups=[16,16]<=[16,16]T(1,0), to_apply=%sum
+  %ag = bf16[16,1024]{1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={1}
+  %rs = f32[8,64]{1,0} reduce-scatter(%z), replica_groups=[4,4]<=[16], dimensions={1}
+  %aa = bf16[384,54,7168]{2,1,0} all-to-all(%w), replica_groups=[32,16]<=[512]
+  %cp = f32[32]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %nn = f32[4]{0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 16 * 1024 * 2 // 16
+    assert out["reduce-scatter"] == 8 * 64 * 4 * 4
+    assert out["all-to-all"] == 384 * 54 * 7168 * 2
+    assert out["collective-permute"] == 32 * 4
+    assert out["count"] == 5
+
+
+def test_collective_parser_async_pairs_counted_once():
+    hlo = """
+  %ags = (f32[8,16]{1,0}, f32[8,64]{1,0}) all-gather-start(%x), replica_groups=[4,4]<=[16], dimensions={1}
+  %agd = f32[8,64]{1,0} all-gather-done(%ags)
+"""
+    out = collective_bytes(hlo)
+    assert out["count"] == 1
+    assert out["all-gather"] == 8 * 64 * 4 // 4
+
+
+def test_roofline_dominant_term():
+    t = roofline_terms(flops=197e12, hbm_bytes=0, coll_bytes=0, n_chips=1)
+    assert abs(t["t_compute_s"] - 1.0) < 1e-9
+    assert t["dominant"] == "compute"
+    t = roofline_terms(flops=0, hbm_bytes=819e9, coll_bytes=819e9, n_chips=1)
+    assert t["dominant"] == "collective"   # ICI is ~16x slower than HBM
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess(tmp_path):
+    """Real .lower().compile() on the 16x16 production mesh (512 forced
+    host devices) for the smallest arch."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "train_4k", "--out", str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(
+        (tmp_path / "whisper-tiny__train_4k__pod.json").read_text())
+    assert res["n_chips"] == 256
+    assert res["per_device"]["flops"] > 0
+    assert res["per_device"]["collectives"]["total"] > 0
+    assert res["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+def test_sweep_results_complete_if_present():
+    """When the full sweep has been run, every applicable cell must have
+    succeeded on both meshes (this is the multi-pod deliverable gate)."""
+    rdir = REPO / "results" / "dryrun"
+    if not rdir.exists() or len(list(rdir.glob("*.json"))) < 60:
+        pytest.skip("full dry-run sweep not present")
+    from repro.configs.archs import ARCHS
+    from repro.configs.shapes import SHAPES, cell_applicable
+    missing = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if not cell_applicable(arch, shape):
+                continue
+            for mesh in ("pod", "multipod"):
+                tag = f"{arch}__{shape}__{mesh}"
+                if not (rdir / f"{tag}.json").exists():
+                    missing.append(tag)
+    assert not missing, f"missing dry-run cells: {missing}"
+    # sanity: every result has positive flops and a dominant term
+    for f in rdir.glob("*.json"):
+        res = json.loads(f.read_text())
+        assert res["per_device"]["flops"] > 0, f.name
+        assert res["roofline"]["dominant"] in ("compute", "memory",
+                                               "collective")

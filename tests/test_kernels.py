@@ -1,0 +1,94 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles in repro.kernels.ref (interpret mode on CPU, per assignment)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mec_conv import mec_gemm_pallas, mec_lower_pallas
+from repro.kernels.ops import mec_conv1d_tpu, mec_conv2d_tpu
+
+SWEEP = [
+    # (ih, iw, ic, kh, kw, kc, stride)
+    (7, 7, 1, 3, 3, 1, 1),
+    (12, 14, 3, 5, 3, 8, 2),
+    (9, 9, 4, 3, 3, 6, 1),
+    (11, 13, 2, 4, 5, 3, (2, 3)),
+    (16, 16, 8, 7, 7, 16, 2),
+    (8, 8, 3, 1, 1, 4, 1),
+    (24, 24, 6, 5, 5, 16, 1),
+    (227 // 4, 227 // 4, 3, 11, 11, 8, 4),   # cv1-like geometry, reduced
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, seed, dtype):
+    x = np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("geom", SWEEP)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", ["fused", "fused2", "lowered"])
+def test_mec_conv2d_kernel(geom, dtype, mode):
+    ih, iw, ic, kh, kw, kc, s = geom
+    inp = _rand((2, ih, iw, ic), 0, dtype)
+    ker = _rand((kh, kw, ic, kc), 1, dtype)
+    oracle = ref.conv2d_ref(inp.astype(jnp.float32),
+                            ker.astype(jnp.float32), s)
+    out = mec_conv2d_tpu(inp, ker, s, mode=mode, interpret=True)
+    assert out.shape == oracle.shape
+    tol = 2e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("geom", SWEEP[:5])
+def test_mec_lower_kernel(geom):
+    ih, iw, ic, kh, kw, kc, s = geom
+    s_w = s[1] if isinstance(s, tuple) else s
+    inp = _rand((2, ih, iw, ic), 2, jnp.float32)
+    out = mec_lower_pallas(inp, kw, s_w, interpret=True)
+    oracle = ref.lower_ref(inp, kw, s_w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("t,c,kw", [(10, 5, 4), (1024, 256, 4), (33, 7, 3),
+                                    (512, 64, 2), (5, 3, 4)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_mec_conv1d_kernel(t, c, kw, dtype):
+    x = _rand((2, t, c), 3, dtype)
+    k = _rand((kw, c), 4, dtype)
+    oracle = ref.conv1d_ref(x.astype(jnp.float32), k.astype(jnp.float32))
+    out = mec_conv1d_tpu(x, k, interpret=True)
+    tol = 2e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle), rtol=tol, atol=tol)
+
+
+@hypothesis.given(
+    st.integers(4, 20), st.integers(4, 20), st.integers(1, 6),
+    st.integers(1, 4), st.integers(1, 4), st.integers(1, 8),
+    st.integers(1, 3), st.integers(1, 3))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_mec_fused_kernel_property(ih, iw, ic, kh, kw, kc, sh, sw):
+    hypothesis.assume(ih >= kh and iw >= kw)
+    inp = _rand((1, ih, iw, ic), 5, jnp.float32)
+    ker = _rand((kh, kw, ic, kc), 6, jnp.float32)
+    oracle = ref.conv2d_ref(inp, ker, (sh, sw))
+    out = mec_conv2d_tpu(inp, ker, (sh, sw), mode="fused", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lowered_gemm_matches_fused():
+    """The two kernel modes are numerically identical paths."""
+    inp = _rand((2, 14, 14, 4), 7, jnp.float32)
+    ker = _rand((3, 3, 4, 8), 8, jnp.float32)
+    a = mec_conv2d_tpu(inp, ker, 1, mode="fused", interpret=True)
+    b = mec_conv2d_tpu(inp, ker, 1, mode="lowered", interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

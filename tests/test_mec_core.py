@@ -1,0 +1,132 @@
+"""Property tests for the MEC algorithm (paper §3) against direct
+convolution, plus the paper's analytic memory claims (Eqs. 2-4)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (ConvSpec, direct_conv2d, fft_conv2d, im2col_conv2d,
+                        im2col_lower, mec_conv2d, mec_lower, pad_same,
+                        vanilla_mec, winograd_conv2d)
+from repro.core.memory import (conv_flops, im2col_overhead, mec_overhead,
+                               mec_saving)
+
+conv_geoms = st.tuples(
+    st.integers(1, 3),        # n
+    st.integers(4, 18),       # i_h
+    st.integers(4, 18),       # i_w
+    st.integers(1, 5),        # i_c
+    st.integers(1, 4),        # k_h
+    st.integers(1, 4),        # k_w
+    st.integers(1, 6),        # k_c
+    st.integers(1, 3),        # s_h
+    st.integers(1, 3),        # s_w
+).filter(lambda g: g[1] >= g[4] and g[2] >= g[5])
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape)
+                       .astype(np.float32))
+
+
+@hypothesis.given(conv_geoms, st.sampled_from(["A", "B", "auto"]))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_mec_equals_direct(geom, solution):
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    inp = _rand((n, ih, iw, ic), 0)
+    ker = _rand((kh, kw, ic, kc), 1)
+    ref = direct_conv2d(inp, ker, (sh, sw))
+    out = mec_conv2d(inp, ker, (sh, sw), solution=solution)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(conv_geoms)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_im2col_equals_direct(geom):
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    inp = _rand((n, ih, iw, ic), 2)
+    ker = _rand((kh, kw, ic, kc), 3)
+    ref = direct_conv2d(inp, ker, (sh, sw))
+    out = im2col_conv2d(inp, ker, (sh, sw))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(conv_geoms)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_fft_equals_direct(geom):
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    inp = _rand((n, ih, iw, ic), 4)
+    ker = _rand((kh, kw, ic, kc), 5)
+    ref = direct_conv2d(inp, ker, (sh, sw))
+    out = fft_conv2d(inp, ker, (sh, sw))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_winograd_equals_direct():
+    inp = _rand((2, 12, 13, 5), 6)
+    ker = _rand((3, 3, 5, 7), 7)
+    ref = direct_conv2d(inp, ker, 1)
+    out = winograd_conv2d(inp, ker)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vanilla_mec_fig1():
+    """The worked example of Fig. 1/2: 7x7 input, 3x3 kernel, s=1."""
+    inp = _rand((7, 7), 8)
+    ker = _rand((3, 3), 9)
+    ref = direct_conv2d(inp[None, :, :, None], ker[:, :, None, None], 1)
+    out = vanilla_mec(inp, ker, 1)
+    assert out.shape == (5, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref)[0, :, :, 0],
+                               rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(conv_geoms)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_memory_model_eq4(geom):
+    """Eq. 4: R = i_n k_c? exact difference; MEC always <= im2col when
+    k_h > s_h, equal-or-larger never otherwise claimed."""
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    s = ConvSpec(n, ih, iw, ic, kh, kw, kc, sh, sw)
+    r = mec_saving(s)
+    # the closed form of Eq. 4 (elements): i_n*i_c*o_w*k_w*(o_h*k_h - i_h)
+    closed = n * ic * s.o_w * kw * (s.o_h * kh - ih)
+    assert r == closed
+    # The paper's factorization (i_h-k_h)(k_h/s_h - 1) implicitly assumes
+    # s_h | (i_h - k_h); with floor-division o_h the saving can be slightly
+    # negative when rows at the bottom are never visited by the kernel.
+    if kh > sh and ih > kh and (ih - kh) % sh == 0:
+        assert r > 0        # paper: always saves when kernel rows overlap
+
+
+@hypothesis.given(conv_geoms)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_lowered_sizes_match_actual(geom):
+    """The materialized L tensors match Eqs. 2 and 3 exactly."""
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    s = ConvSpec(n, ih, iw, ic, kh, kw, kc, sh, sw)
+    inp = _rand((n, ih, iw, ic), 10)
+    low_mec = mec_lower(inp, kw, sw)
+    assert low_mec.size == mec_overhead(s)          # Eq. 3
+    low_i2c = im2col_lower(inp, kh, kw, sh, sw)
+    assert low_i2c.size == im2col_overhead(s)       # Eq. 2
+
+
+def test_pad_same_roundtrip():
+    inp = _rand((2, 9, 11, 3), 11)
+    padded = pad_same(inp, 3, 3)
+    out = direct_conv2d(padded, _rand((3, 3, 3, 4), 12), 1)
+    assert out.shape == (2, 9, 11, 4)
+
+
+def test_mec_flops_identical_to_im2col():
+    s = ConvSpec(2, 12, 12, 3, 3, 3, 8, 1, 1)
+    # paper §3.2: "total number of mult/add operations remains identical"
+    assert conv_flops(s) == 2 * 2 * 10 * 10 * 3 * 3 * 3 * 8
