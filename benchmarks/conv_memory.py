@@ -7,6 +7,7 @@ import numpy as np
 
 from benchmarks.convbench import CV_LAYERS, spec
 from repro.core.memory import ALL_OVERHEADS
+from repro.launch.costmodel import pick_conv2d_algorithm
 
 
 def rows(batch: int = 1):
@@ -16,6 +17,7 @@ def rows(batch: int = 1):
         mb = {alg: fn(s) * 4 / 2 ** 20 for alg, fn in ALL_OVERHEADS.items()}
         mb["ratio_im2col_mec"] = mb["im2col"] / mb["mec"]
         mb["name"] = name
+        mb["auto"] = pick_conv2d_algorithm(s)   # conv2d front-end's choice
         out.append(mb)
     return out
 
@@ -29,7 +31,7 @@ def main(emit=print):
         emit(f"fig4b_memory,{r['name']},0,"
              f"im2col={r['im2col']:.2f}MB;mec={r['mec']:.2f}MB;"
              f"fft={r['fft']:.2f}MB;wino={r['winograd']:.2f}MB;"
-             f"ratio={r['ratio_im2col_mec']:.2f}x")
+             f"ratio={r['ratio_im2col_mec']:.2f}x;auto={r['auto']}")
     emit(f"fig4b_memory,geomean,0,"
          f"im2col/mec={float(np.exp(np.mean(np.log(ratios)))):.2f}x"
          f" (paper: ~3.2x avg)")

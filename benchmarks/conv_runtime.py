@@ -7,23 +7,27 @@ are always exact.
 """
 from __future__ import annotations
 
-import functools
-
 from benchmarks.convbench import CV_LAYERS, make_arrays, spec, time_us
-from repro.core import (direct_conv2d, fft_conv2d, im2col_conv2d, mec_conv2d,
-                        winograd_conv2d)
+from repro.core import conv2d
 
 
 def algorithms(s):
+    """Every algorithm through the one conv2d front-end (pre-padded VALID
+    input, as the paper assumes)."""
+    stride = (s.s_h, s.s_w)
+
+    def via(**kwargs):
+        return lambda i, k: conv2d(i, k, stride=stride, **kwargs)
+
     algs = {
-        "direct": lambda i, k: direct_conv2d(i, k, (s.s_h, s.s_w)),
-        "im2col": lambda i, k: im2col_conv2d(i, k, (s.s_h, s.s_w)),
-        "mecA": lambda i, k: mec_conv2d(i, k, (s.s_h, s.s_w), solution="A"),
-        "mecB": lambda i, k: mec_conv2d(i, k, (s.s_h, s.s_w), solution="B"),
-        "fft": lambda i, k: fft_conv2d(i, k, (s.s_h, s.s_w)),
+        "direct": via(algorithm="direct"),
+        "im2col": via(algorithm="im2col"),
+        "mecA": via(algorithm="mec", solution="A"),
+        "mecB": via(algorithm="mec", solution="B"),
+        "fft": via(algorithm="fft"),
     }
     if (s.k_h, s.k_w, s.s_h, s.s_w) == (3, 3, 1, 1):
-        algs["winograd"] = lambda i, k: winograd_conv2d(i, k)
+        algs["winograd"] = via(algorithm="winograd")
     return algs
 
 

@@ -4,7 +4,7 @@ im2col improve with the k/s ratio (Eq. 4)."""
 from __future__ import annotations
 
 from benchmarks.convbench import make_arrays, time_us
-from repro.core import im2col_conv2d, mec_conv2d
+from repro.core import conv2d
 from repro.core.convspec import ConvSpec
 from repro.core.memory import im2col_overhead, mec_overhead
 
@@ -17,9 +17,10 @@ def main(emit=print, channel_cap=8, iters: int = 3):
         mem_ratio = im2col_overhead(full) / mec_overhead(full)
         s = ConvSpec(1, 227, 227, 3, 11, 11, min(96, channel_cap), s_, s_)
         inp, ker = make_arrays(s)
-        t_mec = time_us(lambda: mec_conv2d(inp, ker, (s_, s_)), iters=iters)
-        t_i2c = time_us(lambda: im2col_conv2d(inp, ker, (s_, s_)),
-                        iters=iters)
+        t_mec = time_us(lambda: conv2d(inp, ker, stride=(s_, s_),
+                                       algorithm="mec"), iters=iters)
+        t_i2c = time_us(lambda: conv2d(inp, ker, stride=(s_, s_),
+                                       algorithm="im2col"), iters=iters)
         emit(f"fig4a_ks_sweep,s={s_},{t_mec:.0f},"
              f"mem_ratio={mem_ratio:.2f}x;runtime_ratio={t_i2c/t_mec:.2f}x;"
              f"k_over_s={11/s_:.1f}")

@@ -1,4 +1,5 @@
-"""Quickstart: the MEC convolution engine (Cho & Brand, ICML 2017).
+"""Quickstart: the MEC convolution engine (Cho & Brand, ICML 2017),
+every algorithm through the one ``conv2d`` front-end.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,33 +7,32 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import (ConvSpec, direct_conv2d, fft_conv2d, im2col_conv2d,
-                        mec_conv2d, pad_same, winograd_conv2d)
+from repro.core import conv2d, conv2d_spec
 from repro.core.memory import ALL_OVERHEADS
-from repro.kernels import mec_conv2d_tpu
+from repro.launch.costmodel import pick_conv2d_algorithm
 
-# --- a cv7-like layer: 3x3 kernel, stride 1 ------------------------------
+# --- a cv7-like layer: 3x3 kernel, stride 1, SAME padding -----------------
 rng = np.random.RandomState(0)
 x = jnp.asarray(rng.randn(1, 56, 56, 8).astype(np.float32))
 k = jnp.asarray(rng.randn(3, 3, 8, 16).astype(np.float32))
-x = pad_same(x, 3, 3)
 
-ref = direct_conv2d(x, k, 1)
+ref = conv2d(x, k, padding="SAME", algorithm="direct")
 print("output:", ref.shape)
-for name, fn in [
-    ("mec (Solution A)", lambda: mec_conv2d(x, k, 1, solution="A")),
-    ("mec (Solution B)", lambda: mec_conv2d(x, k, 1, solution="B")),
-    ("im2col", lambda: im2col_conv2d(x, k, 1)),
-    ("fft", lambda: fft_conv2d(x, k, 1)),
-    ("winograd F(2x2,3x3)", lambda: winograd_conv2d(x, k)),
-    ("Pallas MEC kernel (fused)", lambda: mec_conv2d_tpu(x, k, 1, mode="fused")),
-    ("Pallas MEC kernel (lowered)", lambda: mec_conv2d_tpu(x, k, 1, mode="lowered")),
+for name, kwargs in [
+    ("mec (Solution A)", dict(algorithm="mec", solution="A")),
+    ("mec (Solution B)", dict(algorithm="mec", solution="B")),
+    ("im2col", dict(algorithm="im2col")),
+    ("fft", dict(algorithm="fft")),
+    ("winograd F(2x2,3x3)", dict(algorithm="winograd")),
+    ("Pallas MEC kernel (fused)", dict(algorithm="mec_fused")),
+    ("Pallas MEC kernel (lowered)", dict(algorithm="mec_lowered")),
 ]:
-    err = float(jnp.max(jnp.abs(fn() - ref)))
+    err = float(jnp.max(jnp.abs(conv2d(x, k, padding="SAME", **kwargs) - ref)))
     print(f"  {name:28s} max|err| vs direct = {err:.2e}")
 
 # --- the paper's memory story (Eqs. 2-4) ----------------------------------
-spec = ConvSpec(1, 58, 58, 8, 3, 3, 16, 1, 1)
-print("\nlowered-matrix overhead (f32 MB):")
+spec = conv2d_spec(x, k, padding="SAME")
+print(f"\nauto dispatch on this geometry -> {pick_conv2d_algorithm(spec)!r}")
+print("lowered-matrix overhead (f32 MB):")
 for alg, f in ALL_OVERHEADS.items():
     print(f"  {alg:10s} {f(spec) * 4 / 2**20:8.2f} MB")

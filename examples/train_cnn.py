@@ -1,8 +1,11 @@
 """End-to-end driver (the paper's native kind): train a CNN classifier
-whose every convolution runs through MEC, on synthetic structured images.
+whose every convolution runs through the unified conv2d front-end with
+``algorithm="mec"`` (differentiable via the MEC custom VJP), on synthetic
+structured images.
 
     PYTHONPATH=src python examples/train_cnn.py --steps 200
-    PYTHONPATH=src python examples/train_cnn.py --width 64 --steps 300  # bigger
+    PYTHONPATH=src python examples/train_cnn.py --algorithm direct  # baseline
+    PYTHONPATH=src python examples/train_cnn.py --width 64 --steps 300
 
 The task: classify which quadrant of the image carries a bright blob —
 learnable only through spatial convolution, so a falling loss is evidence
@@ -16,37 +19,30 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import mec_conv2d, pad_same
+from repro.models.layers import conv2d_layer, init_conv2d
 from repro.optim import adamw
 
 
-def conv_layer(p, x, stride=1):
-    x = pad_same(x, p["w"].shape[0], p["w"].shape[1], stride, stride)
-    y = mec_conv2d(x, p["w"], stride)
-    return jax.nn.relu(y + p["b"])
-
-
-def init_conv(key, kh, kw, cin, cout):
-    return {"w": jax.random.normal(key, (kh, kw, cin, cout)) *
-            (kh * kw * cin) ** -0.5,
-            "b": jnp.zeros((cout,))}
+def conv_layer(p, x, stride=1, algorithm="mec"):
+    return jax.nn.relu(conv2d_layer(p, x, stride=stride, padding="SAME",
+                                    algorithm=algorithm))
 
 
 def init_model(key, width):
     ks = jax.random.split(key, 5)
     return {
-        "c1": init_conv(ks[0], 3, 3, 1, width),
-        "c2": init_conv(ks[1], 3, 3, width, width),
-        "c3": init_conv(ks[2], 3, 3, width, 2 * width),
+        "c1": init_conv2d(ks[0], 3, 3, 1, width),
+        "c2": init_conv2d(ks[1], 3, 3, width, width),
+        "c3": init_conv2d(ks[2], 3, 3, width, 2 * width),
         "head": {"w": jax.random.normal(ks[3], (2 * width, 4)) * 0.05,
                  "b": jnp.zeros((4,))},
     }
 
 
-def forward(p, imgs):
-    x = conv_layer(p["c1"], imgs, 2)
-    x = conv_layer(p["c2"], x, 2)
-    x = conv_layer(p["c3"], x, 2)
+def forward(p, imgs, algorithm="mec"):
+    x = conv_layer(p["c1"], imgs, 2, algorithm)
+    x = conv_layer(p["c2"], x, 2, algorithm)
+    x = conv_layer(p["c3"], x, 2, algorithm)
     x = x.mean(axis=(1, 2))
     return x @ p["head"]["w"] + p["head"]["b"]
 
@@ -69,11 +65,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--width", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--algorithm", default="mec",
+                    help="conv2d algorithm (mec, direct, im2col, ..., auto)")
     args = ap.parse_args(argv)
 
     params = init_model(jax.random.key(0), args.width)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"[train_cnn] {n_params/1e3:.1f}k params, every conv via MEC")
+    print(f"[train_cnn] {n_params/1e3:.1f}k params, every conv via "
+          f"conv2d(algorithm={args.algorithm!r})")
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                                 warmup_steps=10, weight_decay=0.01)
     opt = adamw.init(params)
@@ -83,7 +82,7 @@ def main(argv=None):
         imgs, labels = make_batch(key, args.batch)
 
         def loss_fn(p):
-            logits = forward(p, imgs)
+            logits = forward(p, imgs, args.algorithm)
             return -jax.nn.log_softmax(logits)[
                 jnp.arange(args.batch), labels].mean(), logits
 

@@ -11,23 +11,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.archs import smoke_config
-from repro.core import mec_conv2d
+from repro.core import conv2d
 from repro.models.lm import LM
 
 
 def conv_frontend(key, mel, d_model):
     """mel (B, T, n_mels) -> (B, T//2, d_model) via two MEC conv1d layers
     (expressed as height-1 conv2d: exactly the paper's Algorithm 2 with
-    i_h = time)."""
+    i_h = time).  Padding and dispatch live in the conv2d front-end; the
+    stride-2 layer keeps the whisper-conventional symmetric (1, 1) time
+    pad explicitly (SAME would pad (0, 1) for even T, shifting every
+    window by one frame)."""
     b, t, n_mels = mel.shape
     k1, k2 = jax.random.split(key)
     w1 = jax.random.normal(k1, (3, 1, n_mels, d_model)) * n_mels ** -0.5
     w2 = jax.random.normal(k2, (3, 1, d_model, d_model)) * d_model ** -0.5
     x = mel[:, :, None, :]                       # (B, T, 1, mels) h=time
-    x = jnp.pad(x, ((0, 0), (1, 1), (0, 0), (0, 0)))
-    x = jax.nn.gelu(mec_conv2d(x, w1, (1, 1)))
-    x = jnp.pad(x, ((0, 0), (1, 1), (0, 0), (0, 0)))
-    x = jax.nn.gelu(mec_conv2d(x, w2, (2, 1)))   # stride-2 downsample
+    x = jax.nn.gelu(conv2d(x, w1, stride=(1, 1), padding="SAME",
+                           algorithm="mec"))
+    x = jax.nn.gelu(conv2d(x, w2, stride=(2, 1), padding=((1, 1), (0, 0)),
+                           algorithm="mec"))     # stride-2 downsample
     return x[:, :, 0, :]
 
 

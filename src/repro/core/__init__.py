@@ -1,5 +1,7 @@
-"""Core MEC algorithm (paper contribution) and the baselines it is
-compared against in §4 of the paper."""
+"""Core MEC algorithm (paper contribution), the baselines it is compared
+against in §4 of the paper, and the unified ``conv2d`` front-end that
+dispatches among them (DESIGN.md §1)."""
+from repro.core.conv_api import ALGORITHMS, MEC_ALGORITHMS, conv2d, conv2d_spec
 from repro.core.convspec import ConvSpec, pad_same, spec_of
 from repro.core.direct import direct_conv2d
 from repro.core.fft_conv import fft_conv2d
@@ -9,6 +11,7 @@ from repro.core.mec import (mec_conv1d_depthwise, mec_conv2d, mec_lower,
 from repro.core.winograd import winograd_conv2d
 
 __all__ = [
+    "ALGORITHMS", "MEC_ALGORITHMS", "conv2d", "conv2d_spec",
     "ConvSpec", "pad_same", "spec_of",
     "mec_conv2d", "mec_lower", "vanilla_mec", "mec_conv1d_depthwise",
     "im2col_conv2d", "im2col_lower",

@@ -1,0 +1,57 @@
+"""Version-compat shims for the pinned jax (0.4.37).
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace in later releases, and two kwargs were renamed along
+the way:
+
+* ``check_rep``  -> ``check_vma``
+* ``auto={axes left automatic}`` -> ``axis_names={axes made manual}``
+  (complementary sets over the mesh axes)
+
+Every module in this package imports ``shard_map`` from here and uses
+the *new* spellings; the shim rewrites them for old builds so one compat
+file covers the whole repo.
+
+``abstract_mesh`` papers over the ``AbstractMesh`` constructor change
+(new: ``AbstractMesh(axis_sizes, axis_names)``; old 0.4.x:
+``AbstractMesh(((name, size), ...))``).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Sequence
+
+from jax.sharding import AbstractMesh as _AbstractMesh
+
+try:  # jax >= 0.6-ish exports it at top level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # the pinned 0.4.x line
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if "axis_names" in kwargs:
+            manual = frozenset(kwargs.pop("axis_names"))
+            mesh = kwargs.get("mesh") or (args[1] if len(args) > 1 else None)
+            if mesh is None:
+                raise TypeError("shard_map compat: axis_names requires mesh")
+            kwargs["auto"] = frozenset(mesh.axis_names) - manual
+        return _shard_map(*args, **kwargs)
+
+
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Sequence[str]) -> _AbstractMesh:
+    """AbstractMesh across the constructor-signature change."""
+    try:
+        return _AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # 0.4.x: one tuple of (name, size) pairs
+        return _AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+__all__ = ["abstract_mesh", "shard_map"]

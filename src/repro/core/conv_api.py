@@ -1,0 +1,210 @@
+"""Unified, trainable 2-D convolution front-end (DESIGN.md §1).
+
+Every conv call site in this repo — models, examples, benchmarks — goes
+through ``conv2d``.  It owns padding (SAME/VALID/explicit), validates
+geometry through :class:`~repro.core.convspec.ConvSpec`, and dispatches
+to one of the algorithm back-ends the paper compares in §4:
+
+=============  ============================================================
+``direct``     ``lax.conv_general_dilated`` (XLA direct; numerical oracle)
+``im2col``     full Toeplitz lowering + one GEMM (paper Eq. 2 baseline)
+``fft``        frequency-domain (paper §2.2 FFT baseline)
+``winograd``   F(2x2, 3x3); requires a 3x3 kernel and stride 1
+``mec``        paper Algorithm 2, pure JAX (Solutions A/B)
+``mec_lowered``  Pallas: L materialized in HBM (paper-faithful kernels)
+``mec_fused``    Pallas: lowering fused into the GEMM, no L in HBM
+``mec_fused2``   Pallas: h-blocked fused variant with halo fetch
+``auto``       analytic choice via ``repro.launch.costmodel`` (default)
+=============  ============================================================
+
+All MEC paths are wrapped in a single ``jax.custom_vjp`` so the compact
+lowering is trainable end-to-end:
+
+* input gradient = a *transposed MEC conv*: the cotangent, stride-dilated
+  and fully padded, is itself MEC-convolved with the spatially-flipped,
+  channel-transposed kernel;
+* weight gradient reuses ``mec_lower``'s compact L — one small einsum per
+  kernel row over shifted views of L, never an im2col-sized buffer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.convspec import ConvSpec, pad_same, spec_of
+from repro.core.direct import direct_conv2d
+from repro.core.fft_conv import fft_conv2d
+from repro.core.im2col import im2col_conv2d
+from repro.core.mec import mec_conv2d as _mec_reference, mec_lower
+from repro.core.winograd import winograd_conv2d
+
+MEC_ALGORITHMS = ("mec", "mec_lowered", "mec_fused", "mec_fused2")
+ALGORITHMS = ("auto", "direct", "im2col", "fft", "winograd") + MEC_ALGORITHMS
+
+Padding = Union[str, int, Tuple]
+
+
+def _norm_stride(stride) -> Tuple[int, int]:
+    s_h, s_w = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    if min(s_h, s_w) < 1:
+        raise ValueError(f"strides must be >= 1, got {(s_h, s_w)}")
+    return s_h, s_w
+
+
+def apply_padding(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int, s_w: int,
+                  padding: Padding) -> jnp.ndarray:
+    """SAME / VALID / explicit padding, applied once so every algorithm
+    sees an identical pre-padded input (paper §2.1)."""
+    if isinstance(padding, str):
+        mode = padding.upper()
+        if mode == "VALID":
+            return inp
+        if mode == "SAME":
+            return pad_same(inp, k_h, k_w, s_h, s_w)
+        raise ValueError(f"unknown padding {padding!r}")
+    if isinstance(padding, int):
+        padding = ((padding, padding), (padding, padding))
+    p_h, p_w = padding
+    if isinstance(p_h, int):
+        p_h = (p_h, p_h)
+    if isinstance(p_w, int):
+        p_w = (p_w, p_w)
+    return jnp.pad(inp, ((0, 0), tuple(p_h), tuple(p_w), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# MEC custom VJP (shared by the reference and all Pallas variants)
+# ---------------------------------------------------------------------------
+
+def _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret):
+    if variant == "mec":
+        return _mec_reference(inp, kernel, (s_h, s_w), solution=solution)
+    from repro.kernels.ops import mec_conv2d_tpu
+    mode = variant[len("mec_"):]          # lowered | fused | fused2
+    return mec_conv2d_tpu(inp, kernel, (s_h, s_w), mode=mode,
+                          interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _mec_conv(inp, kernel, s_h, s_w, variant, solution, interpret):
+    return _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret)
+
+
+def _mec_fwd(inp, kernel, s_h, s_w, variant, solution, interpret):
+    out = _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret)
+    return out, (inp, kernel)
+
+
+def _mec_input_grad(g: jnp.ndarray, kernel: jnp.ndarray, s_h: int, s_w: int,
+                    i_h: int, i_w: int) -> jnp.ndarray:
+    """dL/dI as a transposed MEC conv: stride-dilate the cotangent, pad it
+    fully, and MEC-convolve with the spatially-flipped kernel whose
+    channel axes are swapped (HWIO -> HWOI)."""
+    k_h, k_w = kernel.shape[:2]
+    g32 = g.astype(jnp.float32)
+    i_n, o_h, o_w, k_c = g.shape
+    if s_h > 1 or s_w > 1:
+        gd = jnp.zeros((i_n, (o_h - 1) * s_h + 1, (o_w - 1) * s_w + 1, k_c),
+                       jnp.float32)
+        gd = gd.at[:, ::s_h, ::s_w, :].set(g32)
+    else:
+        gd = g32
+    gp = jnp.pad(gd, ((0, 0), (k_h - 1, k_h - 1), (k_w - 1, k_w - 1), (0, 0)))
+    k_t = jnp.transpose(kernel[::-1, ::-1], (0, 1, 3, 2)).astype(jnp.float32)
+    di = _mec_reference(gp, k_t, (1, 1))  # (n, (o_h-1)s_h + k_h, ..., i_c)
+    # Input rows/cols beyond the last kernel window receive zero gradient.
+    return jnp.pad(di, ((0, 0), (0, i_h - di.shape[1]),
+                        (0, i_w - di.shape[2]), (0, 0)))
+
+
+def _mec_weight_grad(inp: jnp.ndarray, g: jnp.ndarray, s_h: int, s_w: int,
+                     k_h: int, k_w: int) -> jnp.ndarray:
+    """dL/dK from the compact L (Eq. 3): for each kernel row r, the
+    stride-s_h shifted view of L against the cotangent — the same
+    k_h-decomposition the Pallas kernels use, run in reverse."""
+    low = mec_lower(inp, k_w, s_w)        # (n, o_w, i_h, k_w, i_c)
+    o_h = g.shape[1]
+    g32 = g.astype(jnp.float32)
+    low32 = low.astype(jnp.float32)
+    rows = []
+    for r in range(k_h):
+        lr = lax.slice_in_dim(low32, r, r + s_h * (o_h - 1) + 1,
+                              stride=s_h, axis=2)  # (n, o_w, o_h, k_w, i_c)
+        rows.append(jnp.einsum("nwhjc,nhwo->jco", lr, g32,
+                               preferred_element_type=jnp.float32))
+    return jnp.stack(rows, axis=0)        # (k_h, k_w, i_c, k_c)
+
+
+def _mec_bwd(s_h, s_w, variant, solution, interpret, res, g):
+    inp, kernel = res
+    d_inp = _mec_input_grad(g, kernel, s_h, s_w, inp.shape[1], inp.shape[2])
+    d_ker = _mec_weight_grad(inp, g, s_h, s_w, kernel.shape[0],
+                             kernel.shape[1])
+    return d_inp.astype(inp.dtype), d_ker.astype(kernel.dtype)
+
+
+_mec_conv.defvjp(_mec_fwd, _mec_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public dispatch
+# ---------------------------------------------------------------------------
+
+def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
+           padding: Padding = "VALID", algorithm: str = "auto",
+           solution: str = "auto", interpret: Optional[bool] = None,
+           precision=None) -> jnp.ndarray:
+    """2-D convolution, NHWC x HWIO -> NHWC.
+
+    inp: (i_n, i_h, i_w, i_c); kernel: (k_h, k_w, i_c, k_c).
+    stride: int or (s_h, s_w).  padding: 'SAME' | 'VALID' | int |
+    ((lo, hi), (lo, hi)).  algorithm: one of :data:`ALGORITHMS`.
+    solution: MEC Solution 'A' | 'B' | 'auto' (reference path only).
+    interpret: force Pallas interpret mode (None = auto: interpret
+    everywhere but real TPU).  All MEC algorithms are differentiable via
+    the shared custom VJP.
+    """
+    s_h, s_w = _norm_stride(stride)
+    k_h, k_w = kernel.shape[0], kernel.shape[1]
+    x = apply_padding(inp, k_h, k_w, s_h, s_w, padding)
+    spec = spec_of(x, kernel, (s_h, s_w))
+
+    algorithm = algorithm.lower()
+    if algorithm not in ALGORITHMS:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}")
+    if algorithm == "auto":
+        # Lazy import: costmodel sits in the launch layer; importing it at
+        # call time keeps core free of an import-time upward dependency.
+        from repro.launch.costmodel import pick_conv2d_algorithm
+        algorithm = pick_conv2d_algorithm(spec)
+    if algorithm == "direct":
+        return direct_conv2d(x, kernel, (s_h, s_w), precision=precision)
+    if algorithm == "im2col":
+        return im2col_conv2d(x, kernel, (s_h, s_w), precision=precision)
+    if algorithm == "fft":
+        return fft_conv2d(x, kernel, (s_h, s_w))
+    if algorithm == "winograd":
+        if (spec.k_h, spec.k_w, s_h, s_w) != (3, 3, 1, 1):
+            raise ValueError(
+                "winograd F(2x2,3x3) requires a 3x3 kernel and stride 1; "
+                f"got kernel {(spec.k_h, spec.k_w)} stride {(s_h, s_w)}")
+        return winograd_conv2d(x, kernel)
+    return _mec_conv(x, kernel, s_h, s_w, algorithm, solution, interpret)
+
+
+def conv2d_spec(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
+                padding: Padding = "VALID") -> ConvSpec:
+    """The post-padding ConvSpec ``conv2d`` would dispatch on (for cost
+    and memory accounting without running the conv)."""
+    s_h, s_w = _norm_stride(stride)
+    x = jax.eval_shape(
+        lambda a: apply_padding(a, kernel.shape[0], kernel.shape[1],
+                                s_h, s_w, padding), inp)
+    i_n, i_h, i_w, i_c = x.shape
+    return ConvSpec(i_n, i_h, i_w, i_c, kernel.shape[0], kernel.shape[1],
+                    kernel.shape[3], s_h, s_w)

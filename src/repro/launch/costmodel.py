@@ -242,3 +242,58 @@ def cell_cost(cfg, kind: str, b: int, s: int, mesh: MeshShape) -> Dict:
     if kind == "prefill":
         return prefill_cost(cfg, b, s, mesh)
     return decode_cost(cfg, b, s, mesh)
+
+
+# ----------------------------------------------------- conv2d algorithm choice
+# Consulted by repro.core.conv_api.conv2d(algorithm="auto"); the scoring
+# combines the paper's analytic memory overheads (§3.4, repro.core.memory)
+# with mult-add counts.  Full rules documented in DESIGN.md §1.
+
+def conv2d_algorithm_costs(spec) -> Dict[str, Dict[str, float]]:
+    """Per-eligible-algorithm {flops, overhead_elems} for one ConvSpec."""
+    from repro.core import memory
+    base = memory.conv_flops(spec)
+    costs: Dict[str, Dict[str, float]] = {}
+    for alg, overhead in memory.ALL_OVERHEADS.items():
+        if alg == "winograd" and \
+                (spec.k_h, spec.k_w, spec.s_h, spec.s_w) != (3, 3, 1, 1):
+            continue
+        flops = float(base)
+        if alg == "winograd":
+            flops = base * 4.0 / 9.0      # F(2x2,3x3): 16 mults per 36
+        if alg == "fft":
+            import math
+            hw = spec.i_h * spec.i_w
+            planes = spec.i_n * spec.i_c + spec.i_c * spec.k_c \
+                + spec.i_n * spec.k_c
+            flops = 5.0 * hw * math.log2(max(hw, 2)) * planes \
+                + 8.0 * spec.i_n * hw * spec.i_c * spec.k_c
+        costs[alg] = {"flops": flops,
+                      "overhead_elems": float(overhead(spec))}
+    return costs
+
+
+def pick_conv2d_algorithm(spec, backend: str | None = None) -> str:
+    """Dispatch rule for conv2d(algorithm='auto') — DESIGN.md §1.
+
+    * 1x1 kernels: lowering is a no-op, direct wins outright.
+    * TPU backend: the fused Pallas kernel (no L in HBM at all) is the
+      whole point of this codebase — always.
+    * elsewhere (CPU/GPU via XLA): MEC whenever its compact L actually
+      saves memory over im2col (k_h > s_h row overlap, Eq. 4), else
+      direct — never im2col/fft/winograd, which only trade memory away
+      for speed XLA already gets from its direct conv.
+    """
+    import jax
+
+    backend = backend or jax.default_backend()
+    if spec.k_h == 1 and spec.k_w == 1:
+        return "direct"
+    if backend == "tpu":
+        return "mec_fused"
+    costs = conv2d_algorithm_costs(spec)
+    # MEC pays for itself iff its compact L is strictly smaller than the
+    # im2col lowering it replaces (equivalent to Eq. 4 saving > 0).
+    if costs["mec"]["overhead_elems"] < costs["im2col"]["overhead_elems"]:
+        return "mec"
+    return "direct"

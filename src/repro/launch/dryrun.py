@@ -133,6 +133,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()    # per-device (partitioned module)
+    if isinstance(cost, list):         # jax 0.4.x: one-element list of dicts
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 

@@ -1,4 +1,4 @@
-"""Model primitives: norms, linear, RoPE, SwiGLU, GQA attention.
+"""Model primitives: norms, linear, conv2d, RoPE, SwiGLU, GQA attention.
 
 Attention comes in two forms:
 * ``chunked_attention`` — streaming (flash-style) online-softmax attention
@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.conv_api import conv2d
 from repro.parallel.axes import constrain
 
 _NEG = -1e30
@@ -46,6 +47,27 @@ def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False,
     if bias:
         p["b"] = jnp.zeros((d_out,), dtype)
     return p
+
+
+def init_conv2d(key, k_h: int, k_w: int, c_in: int, c_out: int,
+                dtype=jnp.float32, bias: bool = True) -> dict:
+    p = {"w": (jax.random.normal(key, (k_h, k_w, c_in, c_out), jnp.float32)
+               * (k_h * k_w * c_in) ** -0.5).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d_layer(p: dict, x: jnp.ndarray, *, stride=1, padding="SAME",
+                 algorithm: str = "auto") -> jnp.ndarray:
+    """One conv block through the unified front-end (repro.core.conv_api):
+    padding, geometry validation, and algorithm dispatch all live there —
+    models never hand-roll them."""
+    y = conv2d(x, p["w"].astype(x.dtype), stride=stride, padding=padding,
+               algorithm=algorithm)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
 
 
 def swiglu(x: jnp.ndarray, p: dict) -> jnp.ndarray:

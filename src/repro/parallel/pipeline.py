@@ -22,8 +22,10 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 
 def pipeline_apply(block_fn: Callable, stacked_params, x: jnp.ndarray,

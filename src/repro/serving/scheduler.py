@@ -147,6 +147,14 @@ class ContinuousBatcher:
             tok = int(jnp.argmax(logits[0]))
             req.slot = slot
             req.out.append(tok)
+            # The prefill-produced token obeys the same completion rules as
+            # decode tokens (EOS can legitimately be the first token).
+            if (len(req.out) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                self.cache["lens"] = self.cache["lens"].at[slot].set(-1)
+                self.done.append(req)
+                free.insert(0, slot)
+                continue
             self._next_tok = self._next_tok.at[slot, 0].set(tok)
             self.live[req.rid] = req
 

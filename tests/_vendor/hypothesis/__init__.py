@@ -1,0 +1,88 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API surface this
+suite uses (the container image does not ship hypothesis and nothing may
+be pip-installed).  Only loaded when the real library is absent — see
+``tests/conftest.py``.
+
+Supported: ``given``, ``settings(max_examples=, deadline=)``, ``assume``,
+and the strategies in ``hypothesis.strategies`` (``integers``, ``tuples``,
+``sampled_from``, each with ``.filter``).  Examples are drawn from a
+seeded PRNG so runs are reproducible; ``assume``/filter rejections retry
+up to a bounded number of times per example.
+"""
+from __future__ import annotations
+
+import random
+
+from . import strategies  # noqa: F401  (registers hypothesis.strategies)
+from .strategies import _Strategy
+
+_DEFAULT_MAX_EXAMPLES = 20
+_MAX_REJECTIONS = 2000
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' public name
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*strats: _Strategy):
+    for s in strats:
+        if not isinstance(s, _Strategy):
+            raise TypeError(f"given() expects strategies, got {s!r}")
+
+    def decorate(fn):
+        cfg = getattr(fn, "_stub_settings", None)
+        max_examples = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+
+        # NB: no functools.wraps — pytest would follow __wrapped__ to the
+        # original signature and try to resolve the strategy-bound
+        # parameters as fixtures.  All parameters come from strategies, so
+        # the collected test takes no arguments.
+        def wrapper(*args, **kwargs):
+            # Seed on the test name so every run draws the same examples.
+            rng = random.Random(fn.__qualname__)
+            ran = rejected = 0
+            while ran < max_examples:
+                if rejected > _MAX_REJECTIONS:
+                    raise RuntimeError(
+                        f"{fn.__qualname__}: exceeded {_MAX_REJECTIONS} "
+                        "filter/assume rejections")
+                try:
+                    values = [s.example(rng) for s in strats]
+                except UnsatisfiedAssumption:
+                    rejected += 1
+                    continue
+                try:
+                    fn(*args, *values, **kwargs)
+                except UnsatisfiedAssumption:
+                    rejected += 1
+                    continue
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+__all__ = ["assume", "given", "settings", "strategies",
+           "UnsatisfiedAssumption"]

@@ -1,0 +1,44 @@
+"""Strategy objects for the vendored hypothesis stub (see __init__.py)."""
+from __future__ import annotations
+
+import random
+from typing import Callable, Sequence
+
+_FILTER_TRIES = 200
+
+
+class _Strategy:
+    """A draw rule plus an optional chain of .filter predicates."""
+
+    def __init__(self, draw: Callable[[random.Random], object]):
+        self._draw = draw
+
+    def filter(self, pred: Callable[[object], bool]) -> "_Strategy":
+        def draw(rng: random.Random):
+            for _ in range(_FILTER_TRIES):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            from . import UnsatisfiedAssumption
+            raise UnsatisfiedAssumption()
+
+        return _Strategy(draw)
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements: Sequence) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+__all__ = ["integers", "sampled_from", "tuples"]

@@ -1,8 +1,16 @@
 import os
+import sys
 
 # Tests run single-device (the dry-run owns the 512-device flag; it is
 # exercised via subprocess in test_dryrun.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# The container image ships no `hypothesis`; fall back to the minimal
+# deterministic stub vendored under tests/_vendor (same API subset).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
 
 import jax  # noqa: E402
 
