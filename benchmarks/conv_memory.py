@@ -1,11 +1,19 @@
 """Fig. 4(b,e) — memory overhead of each convolution algorithm on
 cv1-cv12, exact (analytic, f32 bytes, batch=1 as on Mobile).  The paper's
-headline: MEC ~3.2x less overhead than im2col on average."""
+headline: MEC ~3.2x less overhead than im2col on average.
+
+Thin wrapper over the ``repro.bench`` registry: specs come from the
+``table2`` suite; ``--format json`` emits the schema-validated report
+(analytic fields only — memory numbers need no timing run).
+"""
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
-from benchmarks.convbench import CV_LAYERS, spec
+from repro.bench.harness import run_suite
+from repro.bench.scenarios import CV_LAYERS, layer_spec
 from repro.core.memory import ALL_OVERHEADS
 from repro.launch.costmodel import pick_conv2d_algorithm
 
@@ -13,7 +21,7 @@ from repro.launch.costmodel import pick_conv2d_algorithm
 def rows(batch: int = 1):
     out = []
     for name in CV_LAYERS:
-        s = spec(name, batch=batch)
+        s = layer_spec(name, batch=batch)
         mb = {alg: fn(s) * 4 / 2 ** 20 for alg, fn in ALL_OVERHEADS.items()}
         mb["ratio_im2col_mec"] = mb["im2col"] / mb["mec"]
         mb["name"] = name
@@ -22,7 +30,11 @@ def rows(batch: int = 1):
     return out
 
 
-def main(emit=print):
+def main(emit=print, fmt: str = "csv"):
+    if fmt == "json":
+        doc = run_suite("table2", with_hlo=False, with_timing=False)
+        emit(json.dumps(doc, indent=2))
+        return doc
     rs = rows()
     emit("table,name,us_per_call,derived")
     ratios = []

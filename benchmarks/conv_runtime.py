@@ -1,46 +1,57 @@
 """Fig. 4(c,d) — convolution runtime per algorithm on cv1-cv12 (CPU).
 
 This container is a single CPU core, so by default channels are capped at
-16/32 (geometry preserved) to keep the full sweep under a few minutes;
+16 (geometry preserved) to keep the full sweep under a few minutes;
 ``--full`` runs the exact paper sizes.  Memory numbers (conv_memory.py)
 are always exact.
+
+Thin wrapper over ``repro.bench``: every cell is timed by
+``repro.bench.harness.measure`` (pre-compiled calls, median-of-iters);
+``--format json`` emits the full ``table2`` suite report instead of the
+legacy CSV lines.
 """
 from __future__ import annotations
 
-from benchmarks.convbench import CV_LAYERS, make_arrays, spec, time_us
-from repro.core import conv2d
+import dataclasses
+import json
 
+from repro.bench.harness import measure, run_suite
+from repro.bench.report import make_report
+from repro.bench.scenarios import (CV_LAYERS, Scenario, eligible_algorithms,
+                                   layer_spec, resolve_suite)
 
-def algorithms(s):
-    """Every algorithm through the one conv2d front-end (pre-padded VALID
-    input, as the paper assumes)."""
-    stride = (s.s_h, s.s_w)
-
-    def via(**kwargs):
-        return lambda i, k: conv2d(i, k, stride=stride, **kwargs)
-
-    algs = {
-        "direct": via(algorithm="direct"),
-        "im2col": via(algorithm="im2col"),
-        "mecA": via(algorithm="mec", solution="A"),
-        "mecB": via(algorithm="mec", solution="B"),
-        "fft": via(algorithm="fft"),
-    }
-    if (s.k_h, s.k_w, s.s_h, s.s_w) == (3, 3, 1, 1):
-        algs["winograd"] = via(algorithm="winograd")
-    return algs
+# The variants Fig 4(c,d) compares (the Pallas mec_* kernels are covered
+# by the full table2 suite / tpu_traffic model instead).
+_FIG4_ALGS = ("direct", "im2col", "mecA", "mecB", "fft", "winograd")
 
 
 def run_layer(name: str, channel_cap=16, batch: int = 1, iters: int = 3):
-    s = spec(name, batch=batch, channel_cap=channel_cap)
-    inp, ker = make_arrays(s)
-    out = {}
-    for alg, fn in algorithms(s).items():
-        out[alg] = time_us(lambda fn=fn: fn(inp, ker), iters=iters)
-    return out
+    """{algorithm: us_per_call} for one Table 2 layer."""
+    spec = layer_spec(name, batch=batch)
+    sc = Scenario(name=name, spec=spec,
+                  run_spec=layer_spec(name, batch=batch,
+                                      channel_cap=channel_cap),
+                  algorithms=eligible_algorithms(spec, _FIG4_ALGS))
+    return {alg: measure(sc, alg, iters=iters,
+                         with_hlo=False)["us_per_call"]
+            for alg in sc.algorithms}
 
 
-def main(emit=print, channel_cap=16, iters: int = 3):
+def main(emit=print, fmt: str = "csv", channel_cap=16, iters: int = 3):
+    if fmt == "json":
+        if channel_cap == 16:      # the registry's own table2 run_spec cap
+            doc = run_suite("table2", iters=iters, with_hlo=False)
+        else:
+            # honour --full / a custom cap by re-deriving run_specs
+            scenarios = [dataclasses.replace(
+                sc, run_spec=layer_spec(sc.name, channel_cap=channel_cap))
+                for sc in resolve_suite("table2")]
+            recs = [measure(sc, alg, iters=iters, with_hlo=False)
+                    for sc in scenarios for alg in sc.algorithms]
+            doc = make_report("table2", recs,
+                              {"iters": iters, "channel_cap": channel_cap})
+        emit(json.dumps(doc, indent=2))
+        return doc
     emit("table,name,us_per_call,derived")
     speedups = []
     for name in CV_LAYERS:
@@ -66,5 +77,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--format", choices=("csv", "json"), default="csv")
     a = ap.parse_args()
-    main(channel_cap=None if a.full else 16, iters=a.iters)
+    main(fmt=a.format, channel_cap=None if a.full else 16, iters=a.iters)

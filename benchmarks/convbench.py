@@ -1,59 +1,21 @@
-"""Paper benchmark definitions: Table 2 (cv1-cv12) and the ResNet-101
-weighted set (Table 3), plus shared timing helpers."""
+"""Back-compat shim: the paper tables and timing helpers now live in the
+``repro.bench`` subsystem (``repro.bench.scenarios`` owns CV_LAYERS /
+RESNET101_WEIGHTS, ``repro.bench.harness`` owns arrays and timing).
+This module re-exports the old names so existing imports keep working."""
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict
+from typing import Callable
 
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
+from repro.bench.harness import make_arrays, time_compiled  # noqa: F401
+from repro.bench.scenarios import (CV_LAYERS, RESNET101_WEIGHTS,  # noqa: F401
+                                   layer_spec)
 from repro.core.convspec import ConvSpec
-
-# Table 2: name -> (i_h, i_w, i_c, k_h, k_w, o_c, stride)
-CV_LAYERS = {
-    "cv1": (227, 227, 3, 11, 11, 96, 4),
-    "cv2": (231, 231, 3, 11, 11, 96, 4),
-    "cv3": (227, 227, 3, 7, 7, 64, 2),
-    "cv4": (224, 224, 64, 7, 7, 64, 2),
-    "cv5": (24, 24, 96, 5, 5, 256, 1),
-    "cv6": (12, 12, 256, 3, 3, 512, 1),
-    "cv7": (224, 224, 3, 3, 3, 64, 1),
-    "cv8": (112, 112, 64, 3, 3, 128, 1),
-    "cv9": (56, 56, 64, 3, 3, 64, 1),
-    "cv10": (28, 28, 128, 3, 3, 128, 1),
-    "cv11": (14, 14, 256, 3, 3, 256, 1),
-    "cv12": (7, 7, 512, 3, 3, 512, 1),
-}
-
-# Table 3: ResNet-101 layer weights (occurrence counts)
-RESNET101_WEIGHTS = {"cv4": 1, "cv9": 3, "cv10": 4, "cv11": 23, "cv12": 3}
 
 
 def spec(name: str, batch: int = 1, channel_cap: int | None = None) -> ConvSpec:
-    ih, iw, ic, kh, kw, oc, s = CV_LAYERS[name]
-    if channel_cap:
-        ic, oc = min(ic, channel_cap), min(oc, channel_cap)
-    return ConvSpec(batch, ih, iw, ic, kh, kw, oc, s, s)
-
-
-def make_arrays(s: ConvSpec, seed: int = 0):
-    rng = np.random.RandomState(seed)
-    inp = jnp.asarray(rng.randn(s.i_n, s.i_h, s.i_w, s.i_c).astype(np.float32))
-    ker = jnp.asarray(rng.randn(s.k_h, s.k_w, s.i_c, s.k_c).astype(np.float32))
-    return inp, ker
+    return layer_spec(name, batch=batch, channel_cap=channel_cap)
 
 
 def time_us(fn: Callable, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall-clock microseconds per call (paper: mean of 10; we use
-    a median of ``iters`` on this single-core container)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    """Median wall-clock microseconds per call (legacy name)."""
+    return time_compiled(fn, iters=iters, warmup=warmup)["us_median"]

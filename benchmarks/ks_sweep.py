@@ -1,31 +1,36 @@
 """Fig. 4(a) — cv1 with the 11x11 kernel, stride swept 1..10: both the
 memory-overhead ratio (exact) and runtime ratio (measured) of MEC vs
-im2col improve with the k/s ratio (Eq. 4)."""
+im2col improve with the k/s ratio (Eq. 4).
+
+Thin wrapper over the ``repro.bench`` ``ks_sweep`` suite; ``--format
+json`` emits the schema-validated report.
+"""
 from __future__ import annotations
 
-from benchmarks.convbench import make_arrays, time_us
-from repro.core import conv2d
-from repro.core.convspec import ConvSpec
-from repro.core.memory import im2col_overhead, mec_overhead
+import json
+
+from repro.bench.harness import run_suite
 
 
-def main(emit=print, channel_cap=8, iters: int = 3):
+def main(emit=print, fmt: str = "csv", iters: int = 3):
+    doc = run_suite("ks_sweep", iters=iters, with_hlo=False)
+    if fmt == "json":
+        emit(json.dumps(doc, indent=2))
+        return doc
+    by_scenario = {}
+    for r in doc["results"]:
+        by_scenario.setdefault(r["scenario"], {})[r["algorithm"]] = r
     emit("table,name,us_per_call,derived")
-    prev_ratio = None
-    for s_ in range(1, 11):
-        full = ConvSpec(1, 227, 227, 3, 11, 11, 96, s_, s_)
-        mem_ratio = im2col_overhead(full) / mec_overhead(full)
-        s = ConvSpec(1, 227, 227, 3, 11, 11, min(96, channel_cap), s_, s_)
-        inp, ker = make_arrays(s)
-        t_mec = time_us(lambda: conv2d(inp, ker, stride=(s_, s_),
-                                       algorithm="mec"), iters=iters)
-        t_i2c = time_us(lambda: conv2d(inp, ker, stride=(s_, s_),
-                                       algorithm="im2col"), iters=iters)
-        emit(f"fig4a_ks_sweep,s={s_},{t_mec:.0f},"
-             f"mem_ratio={mem_ratio:.2f}x;runtime_ratio={t_i2c/t_mec:.2f}x;"
-             f"k_over_s={11/s_:.1f}")
-        prev_ratio = mem_ratio
-    return prev_ratio
+    mem_ratio = None
+    for name, algs in by_scenario.items():
+        mec, i2c = algs["mecA"], algs["im2col"]
+        s_ = mec["spec"]["s_h"]
+        mem_ratio = i2c["overhead_elems"] / mec["overhead_elems"]
+        emit(f"fig4a_ks_sweep,s={s_},{mec['us_per_call']:.0f},"
+             f"mem_ratio={mem_ratio:.2f}x;"
+             f"runtime_ratio={i2c['us_per_call'] / mec['us_per_call']:.2f}x;"
+             f"k_over_s={mec['spec']['k_h'] / s_:.1f}")
+    return mem_ratio
 
 
 if __name__ == "__main__":

@@ -2,31 +2,43 @@
 
 Memory is exact (f32, batch=1, as the paper's Mobile setting); runtime
 uses the measured layer timings weighted by the paper's occurrence
-counts.  Paper result: 3.2x memory, 1.2x runtime."""
+counts.  Paper result: 3.2x memory, 1.2x runtime.
+
+Thin wrapper over the ``repro.bench`` ``resnet101`` suite (which carries
+the occurrence weights per scenario); ``--format json`` emits the
+schema-validated report.
+"""
 from __future__ import annotations
 
-from benchmarks.conv_runtime import run_layer
-from benchmarks.convbench import RESNET101_WEIGHTS, spec
-from repro.core.memory import im2col_overhead, mec_overhead
+import json
+
+from repro.bench.harness import run_suite
 
 
-def main(emit=print, channel_cap=16, iters: int = 3):
+def main(emit=print, fmt: str = "csv", iters: int = 3):
+    doc = run_suite("resnet101", iters=iters, with_hlo=False)
+    if fmt == "json":
+        emit(json.dumps(doc, indent=2))
+        return doc
+    by_scenario = {}
+    for r in doc["results"]:
+        by_scenario.setdefault(r["scenario"], {})[r["algorithm"]] = r
     emit("table,name,us_per_call,derived")
     mem_i2c = mem_mec = 0.0
     t_i2c = t_mec = 0.0
-    for name, w in RESNET101_WEIGHTS.items():
-        s = spec(name, batch=1)
-        m_i = im2col_overhead(s) * 4 / 2 ** 20
-        m_m = mec_overhead(s) * 4 / 2 ** 20
-        r = run_layer(name, channel_cap=channel_cap, iters=iters)
-        best_mec = min(r["mecA"], r["mecB"])
+    for name, algs in by_scenario.items():
+        w = algs["im2col"]["weight"]
+        m_i = algs["im2col"]["overhead_bytes"] / 2 ** 20
+        m_m = algs["mecA"]["overhead_bytes"] / 2 ** 20
+        best_mec = min(algs["mecA"]["us_per_call"],
+                       algs["mecB"]["us_per_call"])
         mem_i2c += w * m_i
         mem_mec += w * m_m
-        t_i2c += w * r["im2col"]
+        t_i2c += w * algs["im2col"]["us_per_call"]
         t_mec += w * best_mec
         emit(f"table3_resnet101,{name},{best_mec:.0f},"
              f"weight={w};mem_im2col={m_i:.1f}MB;mem_mec={m_m:.1f}MB;"
-             f"t_im2col={r['im2col']:.0f}us")
+             f"t_im2col={algs['im2col']['us_per_call']:.0f}us")
     emit(f"table3_resnet101,SUM,{t_mec:.0f},"
          f"mem_ratio={mem_i2c/mem_mec:.2f}x (paper 3.2x);"
          f"runtime_ratio={t_i2c/t_mec:.2f}x (paper 1.2x)")

@@ -58,7 +58,11 @@ def all_rows(mesh: MeshShape = MeshShape()):
     return rows
 
 
-def main(emit=print):
+def main(emit=print, fmt: str = "csv"):
+    if fmt == "json":
+        out = all_rows()
+        emit(json.dumps(out, indent=2))
+        return out
     emit("table,name,us_per_call,derived")
     for r in all_rows():
         emit(f"roofline,{r['arch']}__{r['shape']},"

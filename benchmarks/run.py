@@ -1,12 +1,22 @@
 """Benchmark driver — one section per paper table/figure plus the
-TPU-side analyses.  Prints ``table,name,us_per_call,derived`` CSV.
+TPU-side analyses.  Default output is the legacy
+``table,name,us_per_call,derived`` CSV; ``--format json`` passes through
+to the ``repro.bench`` harness (schema-validated reports for the conv
+sections, structured rows for the analytic ones).
 
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run --only fig4b_memory
+  PYTHONPATH=src python -m benchmarks.run --format json
+
+A section that raises no longer aborts the run mid-loop: remaining
+sections still execute, the traceback is printed, and the driver exits
+non-zero listing every failed section.
 """
 from __future__ import annotations
 
 import argparse
+import sys
+import traceback
 
 from benchmarks import (conv_memory, conv_runtime, ks_sweep, resnet101,
                         roofline, tpu_traffic)
@@ -24,12 +34,24 @@ SECTIONS = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    ap.add_argument("--format", choices=("csv", "json"), default="csv",
+                    help="json routes conv sections through repro.bench")
     args = ap.parse_args()
+    failures = []
     for name, fn in SECTIONS.items():
         if args.only and name != args.only:
             continue
         print(f"# === {name} ===")
-        fn()
+        try:
+            fn(fmt=args.format)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"# === {name}: FAILED ===", file=sys.stderr)
+    if failures:
+        raise SystemExit(
+            f"{len(failures)} benchmark section(s) failed: "
+            + ", ".join(failures))
 
 
 if __name__ == "__main__":

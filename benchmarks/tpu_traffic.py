@@ -15,7 +15,9 @@ memory-bound.
 """
 from __future__ import annotations
 
-from benchmarks.convbench import CV_LAYERS, spec
+import json
+
+from repro.bench.scenarios import CV_LAYERS, layer_spec as spec
 from repro.core.memory import conv_flops, im2col_overhead, mec_overhead
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
 
@@ -42,7 +44,24 @@ def traffic(s):
     }
 
 
-def main(emit=print):
+def rows(batch: int = 32):
+    out = []
+    for name in CV_LAYERS:
+        s = spec(name, batch=batch)
+        t = traffic(s)
+        flops = conv_flops(s)
+        out.append({"name": name, "flops": flops,
+                    "ai_flop_per_byte": flops / t["fused2"],
+                    "bound": "compute" if flops / t["fused2"] > RIDGE
+                             else "memory", **t})
+    return out
+
+
+def main(emit=print, fmt: str = "csv"):
+    if fmt == "json":
+        out = rows()
+        emit(json.dumps(out, indent=2))
+        return out
     emit("table,name,us_per_call,derived")
     for name in CV_LAYERS:
         s = spec(name, batch=32)     # server batch

@@ -1,0 +1,55 @@
+"""CLI entry point:  PYTHONPATH=src python -m repro.bench --suite smoke \\
+    --out BENCH_smoke.json [--format csv] [--crosscheck]"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.bench.harness import run_suite
+from repro.bench.report import render_csv, write_report
+from repro.bench.scenarios import SUITES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.bench", description=__doc__)
+    ap.add_argument("--suite", required=True, choices=sorted(SUITES))
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_<suite>.json here (default: "
+                         "BENCH_<suite>.json in the cwd for json format)")
+    ap.add_argument("--format", choices=("json", "csv"), default="json",
+                    help="csv prints the legacy table,name,us,derived lines")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--interpret", choices=("auto", "true", "false"),
+                    default="auto",
+                    help="Pallas interpret mode for mec_* kernels "
+                         "(auto: interpret everywhere but real TPU)")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip cost_analysis of the compiled executables")
+    ap.add_argument("--no-timing", action="store_true",
+                    help="analytic + HLO fields only (fast, deterministic)")
+    ap.add_argument("--crosscheck", action="store_true",
+                    help="cross-validate costmodel predictions against "
+                         "measurements (adds a 'crosscheck' section)")
+    args = ap.parse_args(argv)
+
+    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+    doc = run_suite(args.suite, iters=args.iters, warmup=args.warmup,
+                    interpret=interpret, with_hlo=not args.no_hlo,
+                    with_timing=not args.no_timing,
+                    crosscheck=args.crosscheck,
+                    progress=lambda msg: print(msg, file=sys.stderr))
+    if args.format == "csv":
+        for line in render_csv(doc):
+            print(line)
+        if args.out:
+            write_report(doc, args.out)
+        return 0
+    out = args.out or f"BENCH_{args.suite}.json"
+    write_report(doc, out)
+    print(f"[bench] {args.suite}: {len(doc['results'])} cells -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

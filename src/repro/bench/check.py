@@ -1,0 +1,151 @@
+"""Regression gate: compare a BENCH_<suite>.json against a baseline.
+
+Per-metric policy (DESIGN.md §3):
+
+* **exact** — ``overhead_elems``, ``overhead_bytes``, ``flops``,
+  ``run_flops``, ``out_shape``, ``spec``, ``run_spec``, ``dtype``,
+  ``auto_algorithm`` (skipped when the two backends differ — the auto
+  dispatch branches on backend): analytic/deterministic; any drift is a real
+  behaviour change (e.g. the Eq. 3 model or the auto dispatch rule
+  changed) and fails the check.
+* **tolerance** — ``us_per_call``: fails only when slower than baseline
+  by more than ``--timing-rtol`` (default 1.0, i.e. 2x — CI machines are
+  noisy).  ``--schema-only-on-timing`` skips timing comparison entirely
+  (the CI perf-smoke job uses this: cross-runner wall-clock is not
+  comparable, schema + exact fields still are).
+* **informational** — ``hlo_flops``/``hlo_bytes``: printed when they
+  drift (XLA version changes move them) but never fail the check.
+
+Every baseline scenario/algorithm cell must be present in the new
+report; missing cells fail (a suite silently losing coverage is itself
+a regression).  Extra cells in the new report are fine.
+
+Exit status: 0 clean, 1 regression/schema failure, 2 usage error.
+
+  PYTHONPATH=src python -m repro.bench.check BENCH_smoke.json \\
+      --baseline benchmarks/baselines/smoke.json --schema-only-on-timing
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+from repro.bench.report import result_key, validate_report
+
+EXACT_FIELDS = ("dtype", "spec", "run_spec", "out_shape", "overhead_elems",
+                "overhead_bytes", "flops", "run_flops", "auto_algorithm")
+
+
+def _load(path) -> Dict:
+    p = pathlib.Path(path)
+    try:
+        return json.loads(p.read_text())
+    except FileNotFoundError:
+        raise SystemExit(f"[bench.check] no such file: {p}")
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"[bench.check] {p} is not valid JSON: {e}")
+
+
+def compare(new: Dict, baseline: Dict, timing_rtol: float = 1.0,
+            schema_only_on_timing: bool = False) -> Tuple[List[str], List[str]]:
+    """(failures, notes) from diffing ``new`` against ``baseline``."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for label, doc in (("new report", new), ("baseline", baseline)):
+        for err in validate_report(doc):
+            failures.append(f"schema ({label}): {err}")
+    if failures:
+        return failures, notes
+    if new["suite"] != baseline["suite"]:
+        failures.append(f"suite mismatch: new={new['suite']!r} "
+                        f"baseline={baseline['suite']!r}")
+        return failures, notes
+    if new["environment"]["jax"] != baseline["environment"]["jax"]:
+        notes.append(f"jax version differs: new="
+                     f"{new['environment']['jax']} baseline="
+                     f"{baseline['environment']['jax']}")
+    exact_fields = EXACT_FIELDS
+    if new["environment"]["backend"] != baseline["environment"]["backend"]:
+        # auto dispatch branches on the backend (DESIGN.md §1), so across
+        # backends its pick is expected to differ — don't gate on it.
+        exact_fields = tuple(f for f in EXACT_FIELDS
+                             if f != "auto_algorithm")
+        notes.append(f"backend differs: new="
+                     f"{new['environment']['backend']} baseline="
+                     f"{baseline['environment']['backend']} "
+                     "(auto_algorithm not compared)")
+
+    new_by_key = {result_key(r): r for r in new["results"]}
+    for base in baseline["results"]:
+        key = result_key(base)
+        rec = new_by_key.get(key)
+        if rec is None:
+            failures.append(f"{key}: missing from new report "
+                            "(coverage regression)")
+            continue
+        for f in exact_fields:
+            if rec[f] != base[f]:
+                failures.append(f"{key}: {f} changed "
+                                f"{base[f]!r} -> {rec[f]!r}")
+        for f in ("hlo_flops", "hlo_bytes"):
+            if rec[f] != base[f]:
+                notes.append(f"{key}: {f} drifted {base[f]!r} -> {rec[f]!r} "
+                             "(informational)")
+        if schema_only_on_timing:
+            continue
+        b_us, n_us = base["us_per_call"], rec["us_per_call"]
+        if b_us is None or n_us is None:
+            if (b_us is None) != (n_us is None):
+                failures.append(f"{key}: us_per_call presence changed "
+                                f"{b_us!r} -> {n_us!r}")
+            continue
+        if n_us > b_us * (1.0 + timing_rtol):
+            failures.append(f"{key}: us_per_call regressed "
+                            f"{b_us:.0f} -> {n_us:.0f} "
+                            f"(> {1.0 + timing_rtol:.1f}x baseline)")
+    extra = set(new_by_key) - {result_key(r) for r in baseline["results"]}
+    if extra:
+        notes.append(f"{len(extra)} cells not in baseline (new coverage): "
+                     + ", ".join(sorted(extra)[:5])
+                     + ("..." if len(extra) > 5 else ""))
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.bench.check",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("result", help="BENCH_<suite>.json to check")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline to compare against")
+    ap.add_argument("--timing-rtol", type=float, default=1.0,
+                    help="allowed relative us_per_call slowdown "
+                         "(default 1.0 == 2x)")
+    ap.add_argument("--schema-only-on-timing", action="store_true",
+                    help="skip timing comparison; schema + exact "
+                         "(memory/flops) fields still gate")
+    args = ap.parse_args(argv)
+
+    new, baseline = _load(args.result), _load(args.baseline)
+    failures, notes = compare(new, baseline, timing_rtol=args.timing_rtol,
+                              schema_only_on_timing=args.schema_only_on_timing)
+    for n in notes:
+        print(f"[bench.check] note: {n}")
+    if failures:
+        for f in failures:
+            print(f"[bench.check] FAIL: {f}", file=sys.stderr)
+        print(f"[bench.check] {args.result}: {len(failures)} regression(s) "
+              f"vs {args.baseline}", file=sys.stderr)
+        return 1
+    n_cells = len(baseline["results"])
+    print(f"[bench.check] OK: {args.result} matches {args.baseline} "
+          f"({n_cells} cells"
+          + (", timing schema-only" if args.schema_only_on_timing else "")
+          + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

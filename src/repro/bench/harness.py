@@ -1,0 +1,178 @@
+"""Benchmark harness: one measurement protocol for every scenario.
+
+Protocol (DESIGN.md §3): each (scenario, algorithm) cell is lowered and
+compiled ahead of time (``jax.jit(...).lower(...).compile()``); the
+pre-compiled executable is called ``warmup`` times to reach steady
+state, then ``iters`` times under ``time.perf_counter`` with
+``block_until_ready``; ``us_per_call`` is the median.  Alongside the
+measured timing every record carries *deterministic* analytic fields —
+memory overhead (``repro.core.memory``, paper Eqs. 2–4, on the exact
+paper spec) and flops (``repro.launch.costmodel``) — plus the
+HLO-derived flops/bytes of the compiled executable
+(``repro.launch.hlo_analysis.hlo_flops_bytes``).  The deterministic
+fields are what ``repro.bench.check`` gates on; timing is tolerance- or
+schema-only checked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.scenarios import (ALGORITHM_VARIANTS, Scenario,
+                                   resolve_suite)
+from repro.core.conv_api import conv2d
+from repro.core.convspec import ConvSpec
+from repro.core.memory import algorithm_overhead
+from repro.launch.costmodel import (conv2d_algorithm_costs,
+                                    pick_conv2d_algorithm)
+from repro.launch.hlo_analysis import hlo_flops_bytes
+
+# Variant name -> key into conv2d_algorithm_costs for the flops model
+# (all MEC executions compute the same mult-adds as the reference).
+_FLOPS_BASE = {"mecA": "mec", "mecB": "mec", "mec_lowered": "mec",
+               "mec_fused": "mec", "mec_fused2": "mec"}
+
+
+def make_arrays(s: ConvSpec, dtype: str = "float32", seed: int = 0):
+    """Deterministic NHWC input + HWIO kernel for a spec."""
+    rng = np.random.RandomState(seed)
+    inp = rng.randn(s.i_n, s.i_h, s.i_w, s.i_c).astype(np.float32)
+    ker = rng.randn(s.k_h, s.k_w, s.i_c, s.k_c).astype(np.float32)
+    return jnp.asarray(inp, dtype), jnp.asarray(ker, dtype)
+
+
+def time_compiled(call, iters: int = 3, warmup: int = 1) -> Dict:
+    """Steady-state wall-clock stats (microseconds) of a nullary call."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(call())
+    us: List[float] = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        us.append((time.perf_counter() - t0) * 1e6)
+    return {"iters": max(iters, 1), "warmup": max(warmup, 1),
+            "us_median": float(np.median(us)), "us_min": float(min(us)),
+            "us_mean": float(np.mean(us))}
+
+
+def _analytic_flops(spec: ConvSpec, algorithm: str) -> float:
+    costs = conv2d_algorithm_costs(spec)
+    base = _FLOPS_BASE.get(algorithm, algorithm)
+    return float(costs[base]["flops"])
+
+
+def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
+            interpret: Optional[bool] = None, with_hlo: bool = True,
+            with_timing: bool = True) -> Dict:
+    """One result record for a (scenario, algorithm) cell."""
+    kwargs = dict(ALGORITHM_VARIANTS[algorithm])
+    stride = (sc.run_spec.s_h, sc.run_spec.s_w)
+    dtype_bytes = jnp.zeros((), sc.dtype).dtype.itemsize
+    record = {
+        "scenario": sc.name,
+        "algorithm": algorithm,
+        "dtype": sc.dtype,
+        "weight": sc.weight,
+        "spec": dataclasses.asdict(sc.spec),
+        "run_spec": dataclasses.asdict(sc.run_spec),
+        # Deterministic analytics on the exact paper spec (check gates on
+        # these) ...
+        "overhead_elems": int(algorithm_overhead(sc.spec, algorithm)),
+        "overhead_bytes": int(algorithm_overhead(sc.spec, algorithm)
+                              * dtype_bytes),
+        "flops": _analytic_flops(sc.spec, algorithm),
+        # ... and on the (possibly channel-capped) spec actually executed,
+        # so HLO numbers have an apples-to-apples analytic partner.
+        "run_flops": _analytic_flops(sc.run_spec, algorithm),
+        "auto_algorithm": pick_conv2d_algorithm(sc.spec),
+        "out_shape": list(sc.run_spec.out_shape),
+        "us_per_call": None,
+        "timing": None,
+        "hlo_flops": None,
+        "hlo_bytes": None,
+    }
+    if not (with_hlo or with_timing):
+        return record
+
+    inp, ker = make_arrays(sc.run_spec, sc.dtype)
+    fn = jax.jit(lambda i, k: conv2d(i, k, stride=stride,
+                                     interpret=interpret, **kwargs))
+    compiled = fn.lower(inp, ker).compile()
+    if with_hlo:
+        hlo = hlo_flops_bytes(compiled)
+        record["hlo_flops"] = hlo["flops"]
+        record["hlo_bytes"] = hlo["bytes_accessed"]
+    if with_timing:
+        timing = time_compiled(lambda: compiled(inp, ker),
+                               iters=iters, warmup=warmup)
+        record["timing"] = timing
+        record["us_per_call"] = timing["us_median"]
+    return record
+
+
+def crosscheck_scenario(records: Sequence[Dict]) -> Dict:
+    """Costmodel-vs-measurement cross-validation for one scenario.
+
+    * ``auto_matches_best`` — did ``pick_conv2d_algorithm`` choose the
+      algorithm that actually timed fastest here?
+    * ``auto_overhead_ok`` — is auto's pick also no worse on analytic
+      memory overhead than the measured-fastest one (the paper's point:
+      you should not have to pay memory for speed)?
+    * ``flops_ratio_hlo`` — per-algorithm HLO flops / analytic flops on
+      the executed spec; ~1 means the costmodel predicts what XLA built.
+    """
+    timed = [r for r in records if r["us_per_call"] is not None]
+    out = {"scenario": records[0]["scenario"],
+           "auto_algorithm": records[0]["auto_algorithm"],
+           "measured_best": None, "auto_matches_best": None,
+           "auto_overhead_ok": None, "flops_ratio_hlo": {}}
+    for r in records:
+        if r["hlo_flops"] and r["run_flops"]:
+            out["flops_ratio_hlo"][r["algorithm"]] = \
+                round(r["hlo_flops"] / r["run_flops"], 3)
+    if not timed:
+        return out
+    best = min(timed, key=lambda r: r["us_per_call"])
+    out["measured_best"] = best["algorithm"]
+    auto = out["auto_algorithm"]
+    # auto names a conv2d algorithm; bench variants mecA/mecB both map to it
+    base_of = {n: kw["algorithm"] for n, kw in ALGORITHM_VARIANTS.items()}
+    out["auto_matches_best"] = base_of[best["algorithm"]] == auto
+    auto_recs = [r for r in records if base_of[r["algorithm"]] == auto]
+    if auto_recs:
+        out["auto_overhead_ok"] = \
+            auto_recs[0]["overhead_elems"] <= best["overhead_elems"]
+    return out
+
+
+def run_suite(suite: str, iters: int = 3, warmup: int = 1,
+              interpret: Optional[bool] = None, with_hlo: bool = True,
+              with_timing: bool = True, crosscheck: bool = False,
+              progress=None) -> Dict:
+    """Run a registered suite and return the report document."""
+    from repro.bench.report import make_report
+    scenarios = resolve_suite(suite)
+    results: List[Dict] = []
+    checks: List[Dict] = []
+    for sc in scenarios:
+        recs = []
+        for alg in sc.algorithms:
+            if progress:
+                progress(f"[bench] {suite}/{sc.name}/{alg}")
+            recs.append(measure(sc, alg, iters=iters, warmup=warmup,
+                                interpret=interpret, with_hlo=with_hlo,
+                                with_timing=with_timing))
+        results.extend(recs)
+        if crosscheck:
+            checks.append(crosscheck_scenario(recs))
+    harness = {"iters": iters, "warmup": warmup,
+               "interpret": interpret, "with_hlo": with_hlo,
+               "with_timing": with_timing}
+    return make_report(suite, results, harness,
+                       crosscheck=checks if crosscheck else None)

@@ -1,0 +1,154 @@
+"""BENCH_<suite>.json: schema, environment fingerprint, validation, CSV.
+
+The schema is deliberately flat — one record per (scenario, algorithm)
+cell — so ``repro.bench.check`` can diff two reports key-by-key and CI
+artifacts stay greppable.  Validation is hand-rolled (the container
+ships no ``jsonschema``) but strict: unknown suites, missing fields, or
+wrongly-typed metrics all fail loudly *before* a report is written, so
+a committed baseline can never be malformed.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+from typing import Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+_NUM = (int, float)
+_OPT_NUM = (int, float, type(None))
+
+# field -> allowed types; every result record must carry all of them.
+RESULT_FIELDS = {
+    "scenario": str,
+    "algorithm": str,
+    "dtype": str,
+    "weight": int,
+    "spec": dict,
+    "run_spec": dict,
+    "overhead_elems": int,
+    "overhead_bytes": int,
+    "flops": _NUM,
+    "run_flops": _NUM,
+    "auto_algorithm": str,
+    "out_shape": list,
+    "us_per_call": _OPT_NUM,
+    "timing": (dict, type(None)),
+    "hlo_flops": _OPT_NUM,
+    "hlo_bytes": _OPT_NUM,
+}
+
+SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
+
+ENV_FIELDS = ("jax", "numpy", "python", "backend", "device_count", "platform")
+
+
+def environment_fingerprint() -> Dict:
+    """Everything needed to judge whether two reports are comparable."""
+    import jax
+    import numpy as np
+    return {
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "python": platform.python_version(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+    }
+
+
+def make_report(suite: str, results: Sequence[Dict], harness: Dict,
+                crosscheck: Optional[List[Dict]] = None) -> Dict:
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "suite": suite,
+        "environment": environment_fingerprint(),
+        "harness": harness,
+        "results": list(results),
+    }
+    if crosscheck is not None:
+        doc["crosscheck"] = crosscheck
+    errors = validate_report(doc)
+    if errors:
+        raise ValueError("refusing to emit invalid report:\n  "
+                         + "\n  ".join(errors))
+    return doc
+
+
+def validate_report(doc: Dict) -> List[str]:
+    """All schema violations (empty list == valid)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["report is not a JSON object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version must be {SCHEMA_VERSION}, "
+                    f"got {doc.get('schema_version')!r}")
+    if not isinstance(doc.get("suite"), str) or not doc.get("suite"):
+        errs.append("suite must be a non-empty string")
+    env = doc.get("environment")
+    if not isinstance(env, dict):
+        errs.append("environment must be an object")
+    else:
+        for k in ENV_FIELDS:
+            if k not in env:
+                errs.append(f"environment missing {k!r}")
+    if not isinstance(doc.get("harness"), dict):
+        errs.append("harness must be an object")
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        return errs + ["results must be a non-empty list"]
+    seen = set()
+    for i, rec in enumerate(results):
+        where = f"results[{i}]"
+        if not isinstance(rec, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for field, types in RESULT_FIELDS.items():
+            if field not in rec:
+                errs.append(f"{where} missing {field!r}")
+            elif not isinstance(rec[field], types) \
+                    or isinstance(rec[field], bool):
+                errs.append(f"{where}.{field} has type "
+                            f"{type(rec[field]).__name__}")
+        for sf in ("spec", "run_spec"):
+            spec = rec.get(sf)
+            if isinstance(spec, dict):
+                missing = [k for k in SPEC_FIELDS
+                           if not isinstance(spec.get(k), int)]
+                if missing:
+                    errs.append(f"{where}.{sf} missing int fields {missing}")
+        key = (rec.get("scenario"), rec.get("algorithm"))
+        if key in seen:
+            errs.append(f"{where}: duplicate (scenario, algorithm) {key}")
+        seen.add(key)
+    return errs
+
+
+def result_key(rec: Dict) -> str:
+    return f"{rec['scenario']}/{rec['algorithm']}"
+
+
+def write_report(doc: Dict, path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    errors = validate_report(doc)
+    if errors:
+        raise ValueError("refusing to write invalid report:\n  "
+                         + "\n  ".join(errors))
+    path.write_text(json.dumps(doc, indent=2, sort_keys=False) + "\n")
+    return path
+
+
+def render_csv(doc: Dict) -> List[str]:
+    """Legacy ``table,name,us_per_call,derived`` lines (benchmarks/run.py
+    printed exactly this shape before the registry existed)."""
+    lines = ["table,name,us_per_call,derived"]
+    for rec in doc["results"]:
+        us = rec["us_per_call"]
+        derived = (f"overhead_bytes={rec['overhead_bytes']};"
+                   f"flops={rec['flops']:.3e};auto={rec['auto_algorithm']}")
+        if rec["hlo_flops"] is not None:
+            derived += f";hlo_flops={rec['hlo_flops']:.3e}"
+        lines.append(f"{doc['suite']},{result_key(rec)},"
+                     f"{0 if us is None else us:.0f},{derived}")
+    return lines

@@ -1,0 +1,198 @@
+"""Scenario registry: the paper's evaluation as first-class data.
+
+A :class:`Scenario` names one convolution geometry and the set of
+``conv2d`` algorithm variants to run on it.  Each carries two specs:
+
+* ``spec``      — the exact paper geometry; analytic metrics (memory
+  overhead, flops) are always computed on this, so they stay comparable
+  to the paper regardless of how the scenario is *timed*;
+* ``run_spec``  — the geometry actually timed.  On this single-core
+  container the full-channel paper layers take minutes, so timed runs
+  cap channels (geometry preserved) exactly as ``benchmarks/
+  conv_runtime.py`` always did; ``run_spec == spec`` where affordable.
+
+Suites (resolve with :func:`resolve_suite`):
+
+===============  ===========================================================
+``table2``       paper Table 2, ``cv1``–``cv12``, every algorithm
+``resnet101``    Table 3's ResNet-101 layers with occurrence weights
+``ks_sweep``     Fig 4(a): cv1 geometry, stride swept 1..10, MEC vs im2col
+``batch``        batch-size diversity (cv9 at n = 1/4/16)
+``channels``     channel-count diversity (cv12 geometry, widths 32..512)
+``dtype``        dtype diversity (cv9 in f32 and bf16)
+``smoke``        CI subset: 3 small layers x all algorithms, < 2 min
+===============  ===========================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+from repro.core.convspec import ConvSpec
+
+# Paper Table 2: name -> (i_h, i_w, i_c, k_h, k_w, o_c, stride).
+# This is the canonical copy; benchmarks/convbench.py re-exports it.
+CV_LAYERS = {
+    "cv1": (227, 227, 3, 11, 11, 96, 4),
+    "cv2": (231, 231, 3, 11, 11, 96, 4),
+    "cv3": (227, 227, 3, 7, 7, 64, 2),
+    "cv4": (224, 224, 64, 7, 7, 64, 2),
+    "cv5": (24, 24, 96, 5, 5, 256, 1),
+    "cv6": (12, 12, 256, 3, 3, 512, 1),
+    "cv7": (224, 224, 3, 3, 3, 64, 1),
+    "cv8": (112, 112, 64, 3, 3, 128, 1),
+    "cv9": (56, 56, 64, 3, 3, 64, 1),
+    "cv10": (28, 28, 128, 3, 3, 128, 1),
+    "cv11": (14, 14, 256, 3, 3, 256, 1),
+    "cv12": (7, 7, 512, 3, 3, 512, 1),
+}
+
+# Paper Table 3: ResNet-101 layer occurrence counts.
+RESNET101_WEIGHTS = {"cv4": 1, "cv9": 3, "cv10": 4, "cv11": 23, "cv12": 3}
+
+# conv2d dispatch variants: bench name -> conv2d(**kwargs).  mecA/mecB are
+# the paper's Solution A/B of the reference Algorithm 2; the mec_* names
+# are the Pallas kernels (DESIGN.md §2).
+ALGORITHM_VARIANTS: Dict[str, Dict[str, str]] = {
+    "direct": {"algorithm": "direct"},
+    "im2col": {"algorithm": "im2col"},
+    "fft": {"algorithm": "fft"},
+    "winograd": {"algorithm": "winograd"},
+    "mecA": {"algorithm": "mec", "solution": "A"},
+    "mecB": {"algorithm": "mec", "solution": "B"},
+    "mec_lowered": {"algorithm": "mec_lowered"},
+    "mec_fused": {"algorithm": "mec_fused"},
+    "mec_fused2": {"algorithm": "mec_fused2"},
+}
+
+ALL_VARIANTS = tuple(ALGORITHM_VARIANTS)
+# Cheap cross-section for the diversity suites (reference + one Pallas).
+CORE_VARIANTS = ("direct", "im2col", "mecA", "mec_fused")
+
+
+def eligible_algorithms(spec: ConvSpec, names=ALL_VARIANTS) -> Tuple[str, ...]:
+    """Filter variant names by geometry (winograd is 3x3/stride-1 only)."""
+    ok = []
+    for n in names:
+        if n == "winograd" and \
+                (spec.k_h, spec.k_w, spec.s_h, spec.s_w) != (3, 3, 1, 1):
+            continue
+        ok.append(n)
+    return tuple(ok)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One geometry x algorithm-set cell of a suite."""
+
+    name: str
+    spec: ConvSpec                 # exact paper geometry (analytic metrics)
+    run_spec: ConvSpec             # geometry actually timed
+    algorithms: Tuple[str, ...]
+    dtype: str = "float32"
+    weight: int = 1                # Table-3 occurrence count (else 1)
+
+
+def layer_spec(name: str, batch: int = 1,
+               channel_cap: int | None = None) -> ConvSpec:
+    """ConvSpec for a Table 2 layer, optionally channel-capped."""
+    ih, iw, ic, kh, kw, oc, s = CV_LAYERS[name]
+    if channel_cap:
+        ic, oc = min(ic, channel_cap), min(oc, channel_cap)
+    return ConvSpec(batch, ih, iw, ic, kh, kw, oc, s, s)
+
+
+def _layer_scenario(name: str, batch: int = 1, channel_cap: int | None = 16,
+                    algorithms=ALL_VARIANTS, dtype: str = "float32",
+                    weight: int = 1, tag: str = "") -> Scenario:
+    spec = layer_spec(name, batch=batch)
+    return Scenario(name=name + tag, spec=spec,
+                    run_spec=layer_spec(name, batch=batch,
+                                        channel_cap=channel_cap),
+                    algorithms=eligible_algorithms(spec, algorithms),
+                    dtype=dtype, weight=weight)
+
+
+def _table2() -> Tuple[Scenario, ...]:
+    return tuple(_layer_scenario(n) for n in CV_LAYERS)
+
+
+def _resnet101() -> Tuple[Scenario, ...]:
+    return tuple(_layer_scenario(n, weight=w, algorithms=CORE_VARIANTS
+                                 + ("mecB",))
+                 for n, w in RESNET101_WEIGHTS.items())
+
+
+def _ks_sweep() -> Tuple[Scenario, ...]:
+    # Fig 4(a): cv1's 11x11 kernel, stride 1..10 — the k/s ratio drives
+    # both the Eq. 4 memory saving and the runtime gap vs im2col.
+    out = []
+    for s in range(1, 11):
+        spec = ConvSpec(1, 227, 227, 3, 11, 11, 96, s, s)
+        run = ConvSpec(1, 227, 227, 3, 11, 11, 8, s, s)
+        out.append(Scenario(name=f"cv1_s{s}", spec=spec, run_spec=run,
+                            algorithms=("mecA", "im2col")))
+    return tuple(out)
+
+
+def _batch() -> Tuple[Scenario, ...]:
+    return tuple(_layer_scenario("cv9", batch=b, tag=f"_b{b}")
+                 for b in (1, 4, 16))
+
+
+def _channels() -> Tuple[Scenario, ...]:
+    # cv12's 7x7 plane is small enough to run the paper's channel widths
+    # un-capped; sweep width to see where each lowering pays off.
+    out = []
+    for c in (32, 128, 512):
+        spec = ConvSpec(1, 7, 7, c, 3, 3, c, 1, 1)
+        out.append(Scenario(name=f"cv12_c{c}", spec=spec, run_spec=spec,
+                            algorithms=eligible_algorithms(spec)))
+    return tuple(out)
+
+
+def _dtype() -> Tuple[Scenario, ...]:
+    return tuple(_layer_scenario("cv9", dtype=d, tag=f"_{tag}",
+                                 algorithms=CORE_VARIANTS)
+                 for d, tag in (("float32", "f32"), ("bfloat16", "bf16")))
+
+
+def _smoke() -> Tuple[Scenario, ...]:
+    # Three small layers x every algorithm, sized so the full suite
+    # (including interpret-mode Pallas) stays well under 2 minutes on one
+    # CPU core: a winograd-eligible 3x3/s1, a strided 5x5, and a
+    # cv1-shaped 11x11/s4.
+    shapes = {
+        "s3x3": ConvSpec(1, 14, 14, 4, 3, 3, 8, 1, 1),
+        "s5x5": ConvSpec(1, 16, 16, 3, 5, 5, 8, 2, 2),
+        "s11x11": ConvSpec(1, 23, 23, 3, 11, 11, 8, 4, 4),
+    }
+    return tuple(Scenario(name=n, spec=s, run_spec=s,
+                          algorithms=eligible_algorithms(s))
+                 for n, s in shapes.items())
+
+
+SUITES: Dict[str, Callable[[], Tuple[Scenario, ...]]] = {
+    "table2": _table2,
+    "resnet101": _resnet101,
+    "ks_sweep": _ks_sweep,
+    "batch": _batch,
+    "channels": _channels,
+    "dtype": _dtype,
+    "smoke": _smoke,
+}
+
+
+def resolve_suite(name: str) -> Tuple[Scenario, ...]:
+    if name not in SUITES:
+        raise KeyError(f"unknown suite {name!r}; expected one of "
+                       f"{sorted(SUITES)}")
+    scenarios = SUITES[name]()
+    seen = set()
+    for sc in scenarios:
+        if sc.name in seen:
+            raise ValueError(f"suite {name!r}: duplicate scenario {sc.name!r}")
+        seen.add(sc.name)
+        if not sc.algorithms:
+            raise ValueError(f"suite {name!r}: {sc.name!r} has no algorithms")
+    return scenarios

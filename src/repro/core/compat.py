@@ -15,6 +15,10 @@ file covers the whole repo.
 ``abstract_mesh`` papers over the ``AbstractMesh`` constructor change
 (new: ``AbstractMesh(axis_sizes, axis_names)``; old 0.4.x:
 ``AbstractMesh(((name, size), ...))``).
+
+``cost_analysis`` papers over the ``Compiled.cost_analysis()`` return
+change: 0.4.x returns a one-element list of dicts (or an empty list on
+backends without an HLO cost model), newer jax returns the dict itself.
 """
 from __future__ import annotations
 
@@ -45,6 +49,21 @@ else:
         return _shard_map(*args, **kwargs)
 
 
+def cost_analysis(compiled) -> dict:
+    """Properties dict of ``compiled.cost_analysis()`` across jax versions.
+
+    Returns ``{}`` when the backend provides no cost model, so callers can
+    always ``.get("flops", 0.0)`` without version branches.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:          # some backends raise instead of returning []
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 def abstract_mesh(axis_sizes: Sequence[int],
                   axis_names: Sequence[str]) -> _AbstractMesh:
     """AbstractMesh across the constructor-signature change."""
@@ -54,4 +73,4 @@ def abstract_mesh(axis_sizes: Sequence[int],
         return _AbstractMesh(tuple(zip(axis_names, axis_sizes)))
 
 
-__all__ = ["abstract_mesh", "shard_map"]
+__all__ = ["abstract_mesh", "cost_analysis", "shard_map"]

@@ -64,3 +64,18 @@ ALL_OVERHEADS = {
     "fft": fft_overhead,
     "winograd": winograd_overhead,
 }
+
+# conv2d dispatch names -> the base overhead model above.  The Pallas
+# 'lowered' mode materializes the same compact L as the reference; the
+# fused kernels keep the lowering in VMEM, so their HBM overhead is the
+# direct conv's (zero).
+_DISPATCH_BASE = {
+    "mecA": "mec", "mecB": "mec", "mec_lowered": "mec",
+    "mec_fused": "direct", "mec_fused2": "direct",
+}
+
+
+def algorithm_overhead(s: ConvSpec, algorithm: str) -> int:
+    """Overhead in elements for any ``conv2d`` dispatch name (including
+    solution/Pallas variants not listed in :data:`ALL_OVERHEADS`)."""
+    return ALL_OVERHEADS[_DISPATCH_BASE.get(algorithm, algorithm)](s)

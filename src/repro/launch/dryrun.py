@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.archs import ARCHS
 from repro.configs.shapes import SHAPES, cell_applicable, input_specs
+from repro.core.compat import cost_analysis
 from repro.launch.hlo_analysis import collective_bytes, roofline_terms
 from repro.launch.mesh import make_production_mesh
 from repro.models.lm import LM
@@ -132,9 +133,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()    # per-device (partitioned module)
-    if isinstance(cost, list):         # jax 0.4.x: one-element list of dicts
-        cost = cost[0] if cost else {}
+    cost = cost_analysis(compiled)     # per-device (partitioned module)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 

@@ -86,6 +86,19 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def hlo_flops_bytes(compiled) -> Dict[str, float]:
+    """HLO-derived {flops, bytes_accessed} of a compiled executable.
+
+    Uses the version-normalized ``repro.core.compat.cost_analysis``; both
+    fields are 0.0 on backends without a cost model.  NOTE the while-body
+    caveat in ``repro.launch.costmodel``: scan bodies are counted once.
+    """
+    from repro.core.compat import cost_analysis
+    cost = cost_analysis(compiled)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+
+
 def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
                    n_chips: int) -> Dict[str, float]:
     """Three roofline terms in seconds (assignment §Roofline).

@@ -1,0 +1,150 @@
+"""repro.bench: scenario-registry completeness, report schema validation,
+determinism of the analytic memory/flops fields, and the regression
+gate's pass/fail behaviour (including the committed CI smoke baseline)."""
+import copy
+import json
+import pathlib
+
+import pytest
+
+from repro.bench import (CV_LAYERS, RESNET101_WEIGHTS, SUITES,
+                         ALGORITHM_VARIANTS, resolve_suite, validate_report)
+from repro.bench.check import compare
+from repro.bench.harness import measure
+from repro.bench.report import make_report
+from repro.bench.scenarios import Scenario
+from repro.core.convspec import ConvSpec
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = REPO / "benchmarks" / "baselines" / "smoke.json"
+
+
+# ---------------------------------------------------------------- registry
+
+def test_table2_suite_has_every_paper_layer():
+    names = {sc.name for sc in resolve_suite("table2")}
+    assert len(CV_LAYERS) == 12
+    assert names == set(CV_LAYERS)
+
+
+def test_every_registered_suite_resolves():
+    for suite in SUITES:
+        scenarios = resolve_suite(suite)
+        assert scenarios, suite
+        for sc in scenarios:
+            assert sc.algorithms, (suite, sc.name)
+            sc.spec.validate()
+            sc.run_spec.validate()
+
+
+def test_resnet101_suite_carries_paper_weights():
+    weights = {sc.name: sc.weight for sc in resolve_suite("resnet101")}
+    assert weights == RESNET101_WEIGHTS
+
+
+def test_smoke_suite_covers_every_algorithm_variant():
+    algs = set()
+    for sc in resolve_suite("smoke"):
+        algs.update(sc.algorithms)
+    assert algs == set(ALGORITHM_VARIANTS)
+
+
+def test_unknown_suite_rejected():
+    with pytest.raises(KeyError):
+        resolve_suite("nope")
+
+
+# ------------------------------------------------------------ report schema
+
+def _tiny_scenario():
+    spec = ConvSpec(1, 8, 8, 2, 3, 3, 4, 1, 1)
+    return Scenario(name="tiny", spec=spec, run_spec=spec,
+                    algorithms=("direct", "im2col", "mecA", "mec_fused"))
+
+
+@pytest.fixture(scope="module")
+def tiny_doc():
+    sc = _tiny_scenario()
+    recs = [measure(sc, alg, iters=1, warmup=1) for alg in sc.algorithms]
+    return make_report("smoke", recs, {"iters": 1, "warmup": 1})
+
+
+def test_emitted_report_is_schema_valid(tiny_doc):
+    assert validate_report(tiny_doc) == []
+    # and survives a JSON round-trip (what check/CI actually consume)
+    assert validate_report(json.loads(json.dumps(tiny_doc))) == []
+
+
+def test_schema_rejects_malformed_reports(tiny_doc):
+    bad = copy.deepcopy(tiny_doc)
+    del bad["results"][0]["overhead_bytes"]
+    assert any("overhead_bytes" in e for e in validate_report(bad))
+    bad = copy.deepcopy(tiny_doc)
+    bad["results"][0]["flops"] = "lots"
+    assert any("flops" in e for e in validate_report(bad))
+    bad = copy.deepcopy(tiny_doc)
+    bad["schema_version"] = 99
+    assert any("schema_version" in e for e in validate_report(bad))
+    assert validate_report({"suite": "x"})  # no results at all
+
+
+def test_memory_and_flops_fields_deterministic():
+    sc = _tiny_scenario()
+    runs = [[measure(sc, alg, with_hlo=False, with_timing=False)
+             for alg in sc.algorithms] for _ in range(2)]
+    assert runs[0] == runs[1]
+    by_alg = {r["algorithm"]: r for r in runs[0]}
+    # Eq. 2 vs Eq. 3 on the tiny spec: im2col strictly bigger, fused zero.
+    assert by_alg["im2col"]["overhead_bytes"] > \
+        by_alg["mecA"]["overhead_bytes"] > 0
+    assert by_alg["mec_fused"]["overhead_bytes"] == 0
+    assert by_alg["direct"]["flops"] == by_alg["mecA"]["flops"]
+
+
+# ----------------------------------------------------------- check gating
+
+def test_check_passes_against_itself(tiny_doc):
+    failures, _ = compare(copy.deepcopy(tiny_doc), copy.deepcopy(tiny_doc))
+    assert failures == []
+
+
+def test_check_fails_on_perturbed_memory_overhead(tiny_doc):
+    bad = copy.deepcopy(tiny_doc)
+    bad["results"][1]["overhead_bytes"] += 4
+    failures, _ = compare(bad, tiny_doc, schema_only_on_timing=True)
+    assert any("overhead_bytes" in f for f in failures)
+
+
+def test_check_fails_on_lost_coverage(tiny_doc):
+    shrunk = copy.deepcopy(tiny_doc)
+    shrunk["results"] = shrunk["results"][1:]
+    failures, _ = compare(shrunk, tiny_doc, schema_only_on_timing=True)
+    assert any("missing" in f for f in failures)
+
+
+def test_check_timing_tolerance_and_schema_only(tiny_doc):
+    slow = copy.deepcopy(tiny_doc)
+    slow["results"][0]["us_per_call"] = \
+        tiny_doc["results"][0]["us_per_call"] * 10
+    failures, _ = compare(slow, tiny_doc, timing_rtol=1.0)
+    assert any("us_per_call regressed" in f for f in failures)
+    failures, _ = compare(slow, tiny_doc, schema_only_on_timing=True)
+    assert failures == []
+    # hlo drift is informational, never a failure
+    drift = copy.deepcopy(tiny_doc)
+    drift["results"][0]["hlo_bytes"] = 12345.0
+    failures, notes = compare(drift, tiny_doc, schema_only_on_timing=True)
+    assert failures == []
+    assert any("hlo_bytes" in n for n in notes)
+
+
+# ------------------------------------------------------- committed baseline
+
+def test_committed_smoke_baseline_is_valid_and_complete():
+    doc = json.loads(BASELINE.read_text())
+    assert validate_report(doc) == []
+    assert doc["suite"] == "smoke"
+    got = {(r["scenario"], r["algorithm"]) for r in doc["results"]}
+    want = {(sc.name, alg) for sc in resolve_suite("smoke")
+            for alg in sc.algorithms}
+    assert got == want
