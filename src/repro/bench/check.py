@@ -38,6 +38,13 @@ from repro.bench.report import result_key, validate_report
 EXACT_FIELDS = ("dtype", "spec", "run_spec", "out_shape", "overhead_elems",
                 "overhead_bytes", "flops", "run_flops", "auto_algorithm")
 
+# Distributed-cell analytics (suite ``dist``): exact, but only gated when
+# the baseline record carries them (schema_version 1 baselines predate
+# these fields).
+OPTIONAL_EXACT_FIELDS = ("partition", "n_dev", "halo_bytes_per_device",
+                         "per_device_overhead_elems",
+                         "comm_bytes_per_device", "auto_partition")
+
 
 def _load(path) -> Dict:
     p = pathlib.Path(path)
@@ -90,6 +97,10 @@ def compare(new: Dict, baseline: Dict, timing_rtol: float = 1.0,
             if rec[f] != base[f]:
                 failures.append(f"{key}: {f} changed "
                                 f"{base[f]!r} -> {rec[f]!r}")
+        for f in OPTIONAL_EXACT_FIELDS:
+            if f in base and rec.get(f) != base[f]:
+                failures.append(f"{key}: {f} changed "
+                                f"{base[f]!r} -> {rec.get(f)!r}")
         for f in ("hlo_flops", "hlo_bytes"):
             if rec[f] != base[f]:
                 notes.append(f"{key}: {f} drifted {base[f]!r} -> {rec[f]!r} "

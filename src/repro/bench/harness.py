@@ -30,7 +30,9 @@ from repro.core.conv_api import conv2d
 from repro.core.convspec import ConvSpec
 from repro.core.memory import algorithm_overhead
 from repro.launch.costmodel import (conv2d_algorithm_costs,
-                                    pick_conv2d_algorithm)
+                                    conv_partition_costs,
+                                    pick_conv2d_algorithm,
+                                    pick_conv_partition)
 from repro.launch.hlo_analysis import hlo_flops_bytes
 
 # Variant name -> key into conv2d_algorithm_costs for the flops model
@@ -97,12 +99,42 @@ def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
         "hlo_flops": None,
         "hlo_bytes": None,
     }
+    mesh = None
+    if sc.partition is not None:
+        # Distributed cell: per-device/halo analytics (DESIGN.md §6) are
+        # always emitted; execution additionally needs enough devices.
+        dist = conv_partition_costs(sc.spec, sc.n_dev, dtype_bytes)
+        entry = dist[sc.partition]
+        record["partition"] = sc.partition
+        record["n_dev"] = int(sc.n_dev)
+        record["halo_bytes_per_device"] = entry["halo_bytes_per_device"]
+        record["per_device_overhead_elems"] = \
+            entry["per_device_overhead_elems"]
+        record["comm_bytes_per_device"] = (
+            entry["comm_bytes_fwd_per_device"]
+            + entry["comm_bytes_bwd_per_device"])
+        record["auto_partition"] = pick_conv_partition(
+            sc.spec, {p: sc.n_dev for p in ("batch", "channel", "spatial")},
+            dtype_bytes)
+        from repro.parallel.conv import partition_viable
+        if sc.n_dev > jax.device_count() or \
+                not partition_viable(sc.run_spec, sc.partition, sc.n_dev):
+            with_hlo = with_timing = False
+        else:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(shape=(sc.n_dev,))
     if not (with_hlo or with_timing):
         return record
 
     inp, ker = make_arrays(sc.run_spec, sc.dtype)
-    fn = jax.jit(lambda i, k: conv2d(i, k, stride=stride,
-                                     interpret=interpret, **kwargs))
+    if mesh is not None:
+        from repro.parallel.conv import sharded_conv2d
+        fn = jax.jit(lambda i, k: sharded_conv2d(
+            i, k, stride=stride, partition=sc.partition, mesh=mesh,
+            interpret=interpret, **kwargs))
+    else:
+        fn = jax.jit(lambda i, k: conv2d(i, k, stride=stride,
+                                         interpret=interpret, **kwargs))
     compiled = fn.lower(inp, ker).compile()
     if with_hlo:
         hlo = hlo_flops_bytes(compiled)

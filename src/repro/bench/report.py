@@ -39,6 +39,18 @@ RESULT_FIELDS = {
     "hlo_bytes": _OPT_NUM,
 }
 
+# Distributed-cell fields (suite ``dist``, DESIGN.md §6): optional so
+# schema_version 1 baselines stay valid, but type-checked when present
+# and emitted as a block (partition present => all present).
+OPTIONAL_RESULT_FIELDS = {
+    "partition": str,
+    "n_dev": int,
+    "halo_bytes_per_device": _NUM,
+    "per_device_overhead_elems": _NUM,
+    "comm_bytes_per_device": _NUM,
+    "auto_partition": (str, type(None)),
+}
+
 SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
 
 ENV_FIELDS = ("jax", "numpy", "python", "backend", "device_count", "platform")
@@ -111,6 +123,15 @@ def validate_report(doc: Dict) -> List[str]:
                     or isinstance(rec[field], bool):
                 errs.append(f"{where}.{field} has type "
                             f"{type(rec[field]).__name__}")
+        for field, types in OPTIONAL_RESULT_FIELDS.items():
+            if field in rec and (not isinstance(rec[field], types)
+                                 or isinstance(rec[field], bool)):
+                errs.append(f"{where}.{field} has type "
+                            f"{type(rec[field]).__name__}")
+        if "partition" in rec:
+            missing = [f for f in OPTIONAL_RESULT_FIELDS if f not in rec]
+            if missing:
+                errs.append(f"{where}: distributed cell missing {missing}")
         for sf in ("spec", "run_spec"):
             spec = rec.get(sf)
             if isinstance(spec, dict):

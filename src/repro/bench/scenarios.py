@@ -21,12 +21,17 @@ Suites (resolve with :func:`resolve_suite`):
 ``channels``     channel-count diversity (cv12 geometry, widths 32..512)
 ``dtype``        dtype diversity (cv9 in f32 and bf16)
 ``smoke``        CI subset: 3 small layers x all algorithms, < 2 min
+``dist``         distributed execution (DESIGN.md §6): per-device
+                 overhead + halo-bytes analytics on 2/8/256-way spatial
+                 partitions of cv1-cv12, plus 2-device smoke cells (one
+                 per partition mode) that are actually timed when the
+                 process has >= 2 devices
 ===============  ===========================================================
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.convspec import ConvSpec
 
@@ -91,6 +96,11 @@ class Scenario:
     algorithms: Tuple[str, ...]
     dtype: str = "float32"
     weight: int = 1                # Table-3 occurrence count (else 1)
+    # Distributed cells (suite ``dist``): partition mode + device count.
+    # Analytic per-device/halo fields are always emitted for these;
+    # timing additionally needs n_dev <= jax.device_count().
+    partition: Optional[str] = None
+    n_dev: int = 1
 
 
 def layer_spec(name: str, batch: int = 1,
@@ -172,6 +182,32 @@ def _smoke() -> Tuple[Scenario, ...]:
                  for n, s in shapes.items())
 
 
+def _dist() -> Tuple[Scenario, ...]:
+    # Analytic sweep: every Table-2 layer under 2/8/256-way spatial
+    # partitioning (mecB — the paper's parallel Solution — is the
+    # algorithm the per-device Eq. 3 overhead describes).  These cells
+    # are never timed at 8/256-way on CI; their per-device overhead,
+    # halo-bytes and comm-bytes fields are the deliverable and are gated
+    # exactly by repro.bench.check.
+    out = []
+    for n_dev in (2, 8, 256):
+        for layer in CV_LAYERS:
+            spec = layer_spec(layer)
+            out.append(Scenario(
+                name=f"{layer}_d{n_dev}", spec=spec,
+                run_spec=layer_spec(layer, channel_cap=16),
+                algorithms=("mecB",), partition="spatial", n_dev=n_dev))
+    # CI-affordable 2-device smoke cells: tiny geometry every partition
+    # mode can split, actually executed + timed when the process has two
+    # devices (CI forces --xla_force_host_platform_device_count=2).
+    small = ConvSpec(2, 16, 16, 4, 3, 3, 8, 1, 1)
+    for part in ("batch", "channel", "spatial"):
+        out.append(Scenario(
+            name=f"smoke2_{part}", spec=small, run_spec=small,
+            algorithms=("mecB", "mec_fused"), partition=part, n_dev=2))
+    return tuple(out)
+
+
 SUITES: Dict[str, Callable[[], Tuple[Scenario, ...]]] = {
     "table2": _table2,
     "resnet101": _resnet101,
@@ -180,6 +216,7 @@ SUITES: Dict[str, Callable[[], Tuple[Scenario, ...]]] = {
     "channels": _channels,
     "dtype": _dtype,
     "smoke": _smoke,
+    "dist": _dist,
 }
 
 

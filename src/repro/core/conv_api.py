@@ -157,7 +157,8 @@ _mec_conv.defvjp(_mec_fwd, _mec_bwd)
 def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
            padding: Padding = "VALID", algorithm: str = "auto",
            solution: str = "auto", interpret: Optional[bool] = None,
-           precision=None) -> jnp.ndarray:
+           precision=None, partition: Optional[str] = None,
+           partition_axis: Optional[str] = None) -> jnp.ndarray:
     """2-D convolution, NHWC x HWIO -> NHWC.
 
     inp: (i_n, i_h, i_w, i_c); kernel: (k_h, k_w, i_c, k_c).
@@ -167,7 +168,28 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
     interpret: force Pallas interpret mode (None = auto: interpret
     everywhere but real TPU).  All MEC algorithms are differentiable via
     the shared custom VJP.
+
+    partition routes through the distributed layer
+    (``repro.parallel.conv.sharded_conv2d``, DESIGN.md §6):
+    'batch' | 'channel' | 'spatial' | 'auto' split over the installed
+    ``parallel.axes`` mesh (no mesh -> single-device no-op); 'none'
+    forces single-device; None (default) is rules-aware — sharded 'auto'
+    exactly when ``parallel.axes.use_rules`` rules are installed, so the
+    same model code runs on a laptop and a pod.  partition_axis names the
+    mesh axis explicitly (else per-partition defaults apply).
     """
+    if partition != "none":
+        # Lazy import: parallel sits above core; call-time routing keeps
+        # core import-clean (mirrors the costmodel import below).
+        from repro.parallel.axes import current_rules
+        if partition is not None or current_rules() is not None:
+            from repro.parallel.conv import sharded_conv2d
+            return sharded_conv2d(
+                inp, kernel, stride=stride, padding=padding,
+                algorithm=algorithm, solution=solution,
+                partition=partition or "auto", axis=partition_axis,
+                interpret=interpret, precision=precision)
+
     s_h, s_w = _norm_stride(stride)
     k_h, k_w = kernel.shape[0], kernel.shape[1]
     x = apply_padding(inp, k_h, k_w, s_h, s_w, padding)

@@ -9,6 +9,7 @@ the fused kernel's working set is
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -18,14 +19,60 @@ from repro.kernels.mec_conv import (mec_conv_fused2_pallas,
                                     mec_lower_pallas)
 from repro.kernels.mec_conv1d import mec_conv1d_pallas
 
+# Accumulator budget override for non-v5e targets (bytes; decimal or hex).
+ACC_BYTES_ENV = "REPRO_MEC_ACC_BYTES"
+
+# Per-core VMEM by device kind (substring match against
+# jax.Device.device_kind).  v2-v5 generations all carry ~16 MiB/core;
+# Trillium doubles it.  Unknown kinds (and CPU/GPU interpret runs) fall
+# back to the v5e figure.
+_VMEM_BYTES_BY_KIND = (
+    ("v6", 32 << 20),
+    ("v5", 16 << 20),
+    ("v4", 16 << 20),
+    ("v3", 16 << 20),
+    ("v2", 16 << 20),
+)
+_DEFAULT_VMEM = 16 << 20
+# The f32 accumulator gets 1/8 of VMEM; the rest holds the input strip,
+# kernel block, and Mosaic's double buffering.
+_ACC_FRACTION = 8
+
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def pick_w_blk(o_w: int, k_c: int, target_bytes: int = 2 << 20) -> int:
-    """Output-column block: fill ~2 MiB of VMEM with the f32 accumulator,
-    rounded down to a multiple of 8 (sublane) and capped at o_w."""
+def accumulator_budget() -> int:
+    """VMEM bytes the f32 output accumulator may fill.
+
+    Resolution order: the REPRO_MEC_ACC_BYTES env override, else
+    VMEM/8 for the queried device kind, else the ~2 MiB v5e heuristic —
+    so non-v5e targets tune block sizes without editing source.
+    """
+    env = os.environ.get(ACC_BYTES_ENV)
+    if env:
+        budget = int(env, 0)
+        if budget <= 0:
+            raise ValueError(f"{ACC_BYTES_ENV} must be positive, got {env!r}")
+        return budget
+    try:
+        kind = jax.devices()[0].device_kind.lower()
+    except Exception:
+        return _DEFAULT_VMEM // _ACC_FRACTION
+    for tag, vmem in _VMEM_BYTES_BY_KIND:
+        if tag in kind:
+            return vmem // _ACC_FRACTION
+    return _DEFAULT_VMEM // _ACC_FRACTION
+
+
+def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None) -> int:
+    """Output-column block: fill the accumulator budget (device-queried /
+    env-tunable via :func:`accumulator_budget`, ~2 MiB on v5e) with the
+    f32 accumulator, rounded down to a multiple of 8 (sublane) and capped
+    at o_w."""
+    if target_bytes is None:
+        target_bytes = accumulator_budget()
     blk = max(8, min(512, target_bytes // max(1, 4 * k_c)))
     blk = (blk // 8) * 8
     return max(1, min(blk, o_w))

@@ -273,6 +273,109 @@ def conv2d_algorithm_costs(spec) -> Dict[str, Dict[str, float]]:
     return costs
 
 
+# ------------------------------------------------- conv2d partition choice
+# Consulted by repro.parallel.conv.sharded_conv2d(partition="auto") and the
+# bench `dist` suite.  Per-device terms follow the paper's Eq. 2-4 memory
+# model applied to the *local* geometry each device sees, plus the bytes
+# that cross the interconnect (halo exchange forward, psum transposes
+# backward).  DESIGN.md §6 documents the protocol.
+
+def _halo_rows(spec) -> int:
+    # The executor's halo protocol owns this formula; reusing it keeps
+    # the gated analytic halo bytes equal to what ppermute ships.
+    from repro.parallel.conv import spatial_halo_rows
+    return spatial_halo_rows(spec.k_h, spec.s_h)
+
+
+def conv_partition_costs(spec, n_dev: int, dtype_bytes: int = 4) -> Dict:
+    """Per-partition per-device cost terms for an ``n_dev``-way split.
+
+    Every mode is reported (with ``viable`` flagging whether the geometry
+    actually divides) so analytic benchmark fields stay defined on
+    non-divisible cells:
+
+    * ``per_device_overhead_elems`` — MEC's compact L (Eq. 3) on the
+      local geometry (note: ``channel`` does not shrink L — it splits
+      only the kernel/output);
+    * ``per_device_im2col_elems``   — Eq. 2 on the same local geometry;
+    * ``halo_bytes_per_device``     — spatial halo, ``(k_h - s_h)`` input
+      rows per exchange (0 for batch/channel);
+    * ``comm_bytes_fwd/bwd_per_device`` — interconnect bytes per device:
+      spatial pays the halo each way, batch psums the kernel cotangent,
+      channel psums the input cotangent;
+    * ``flops_per_device``.
+    """
+    import dataclasses as _dc
+
+    from repro.core import memory
+
+    halo = _halo_rows(spec)
+    halo_bytes = spec.i_n * halo * spec.i_w * spec.i_c * dtype_bytes
+    kernel_bytes = spec.k_h * spec.k_w * spec.i_c * spec.k_c * dtype_bytes
+    input_bytes = spec.i_n * spec.i_h * spec.i_w * spec.i_c * dtype_bytes
+    flops_dev = memory.conv_flops(spec) / max(n_dev, 1)
+
+    def ceil_div(a, b):
+        return -(-a // b)
+
+    local = {
+        "batch": _dc.replace(spec, i_n=max(1, ceil_div(spec.i_n, n_dev))),
+        "channel": _dc.replace(spec, k_c=max(1, ceil_div(spec.k_c, n_dev))),
+        "spatial": _dc.replace(
+            spec, i_h=min(spec.i_h, ceil_div(spec.i_h, n_dev) + halo)),
+    }
+    comm = {
+        "batch": (0, kernel_bytes),
+        "channel": (0, input_bytes),
+        "spatial": (halo_bytes, halo_bytes + kernel_bytes),
+    }
+    out: Dict[str, Dict[str, float]] = {}
+    for part, lspec in local.items():
+        fwd, bwd = comm[part]
+        out[part] = {
+            "viable": bool(n_dev > 0 and _viable(spec, part, n_dev)),
+            "n_dev": int(n_dev),
+            "per_device_overhead_elems": float(memory.mec_overhead(lspec)),
+            "per_device_im2col_elems": float(memory.im2col_overhead(lspec)),
+            "halo_bytes_per_device":
+                float(halo_bytes if part == "spatial" else 0),
+            "comm_bytes_fwd_per_device": float(fwd),
+            "comm_bytes_bwd_per_device": float(bwd),
+            "flops_per_device": float(flops_dev),
+        }
+    return out
+
+
+def _viable(spec, partition: str, n_dev: int) -> bool:
+    from repro.parallel.conv import partition_viable
+    return partition_viable(spec, partition, n_dev)
+
+
+def pick_conv_partition(spec, axis_sizes: Dict[str, int],
+                        dtype_bytes: int = 4) -> str | None:
+    """Cheapest viable partition for ``sharded_conv2d(partition='auto')``.
+
+    axis_sizes maps partition name -> the size of the mesh axis it would
+    run over.  Returns None when no mode can split the geometry over more
+    than one device (caller falls back to single-device execution).
+    Ranking: fewest fwd+bwd interconnect bytes per device; ties go to
+    ``batch`` (embarrassingly parallel), then ``spatial``, then
+    ``channel`` — the paper's preference order for keeping the lowered
+    buffer, not the activations, on the wire.
+    """
+    order = ("batch", "spatial", "channel")
+    best, best_cost = None, None
+    for part in order:
+        n = int(axis_sizes.get(part, 1))
+        if n <= 1 or not _viable(spec, part, n):
+            continue
+        c = conv_partition_costs(spec, n, dtype_bytes)[part]
+        cost = c["comm_bytes_fwd_per_device"] + c["comm_bytes_bwd_per_device"]
+        if best_cost is None or cost < best_cost:
+            best, best_cost = part, cost
+    return best
+
+
 def pick_conv2d_algorithm(spec, backend: str | None = None) -> str:
     """Dispatch rule for conv2d(algorithm='auto') — DESIGN.md §1.
 

@@ -14,6 +14,7 @@ Results are appended as JSON files under results/dryrun/ (one per cell) —
 benchmarks/roofline.py and EXPERIMENTS.md read from there.
 """
 import argparse
+import dataclasses
 import json
 import pathlib
 import time
@@ -26,15 +27,32 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.archs import ARCHS
 from repro.configs.shapes import SHAPES, cell_applicable, input_specs
 from repro.core.compat import cost_analysis
+from repro.core.convspec import ConvSpec
+from repro.launch.costmodel import conv_partition_costs
 from repro.launch.hlo_analysis import collective_bytes, roofline_terms
 from repro.launch.mesh import make_production_mesh
 from repro.models.lm import LM
 from repro.optim.adamw import AdamWConfig
 from repro.parallel import sharding
 from repro.parallel.axes import default_rules
+from repro.parallel.conv import (conv_partition_specs, default_axis,
+                                 sharded_conv2d)
 from repro.training import steps
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Distributed-conv dry-run cells (DESIGN.md §6): one per partition mode,
+# geometry sized so the 16-way production axes divide it (specs are
+# pre-padded / VALID).  Each cell compiles a value_and_grad so the halo
+# exchange AND its transpose are exercised at mesh scale.
+CONV_CELLS = {
+    "conv_batch": {"spec": ConvSpec(64, 112, 112, 3, 7, 7, 64, 2, 2),
+                   "partition": "batch"},
+    "conv_channel": {"spec": ConvSpec(8, 56, 56, 64, 3, 3, 256, 1, 1),
+                     "partition": "channel"},
+    "conv_spatial": {"spec": ConvSpec(8, 224, 224, 3, 7, 7, 64, 2, 2),
+                     "partition": "spatial"},
+}
 
 
 def _named(mesh, spec_tree):
@@ -180,10 +198,78 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
     return result
 
 
+def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
+                  algorithm: str = "mec"):
+    """Lower + compile one sharded_conv2d train-style cell (fwd + grad)
+    on the production mesh and record memory / collective analysis."""
+    cell = CONV_CELLS[name]
+    spec, partition = cell["spec"], cell["partition"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+    axis = default_axis(partition, mesh, rules)
+    n_axis = int(mesh.shape[axis])
+    x_spec, k_spec, _ = conv_partition_specs(partition, axis)
+    x = jax.ShapeDtypeStruct((spec.i_n, spec.i_h, spec.i_w, spec.i_c),
+                             jnp.float32)
+    k = jax.ShapeDtypeStruct((spec.k_h, spec.k_w, spec.i_c, spec.k_c),
+                             jnp.float32)
+
+    def loss(xv, kv):
+        out = sharded_conv2d(xv, kv, stride=(spec.s_h, spec.s_w),
+                             padding="VALID", algorithm=algorithm,
+                             partition=partition, mesh=mesh, rules=rules)
+        return jnp.sum(out * out)
+
+    t0 = time.time()
+    with mesh:
+        fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)),
+                     in_shardings=(NamedSharding(mesh, x_spec),
+                                   NamedSharding(mesh, k_spec)))
+        lowered = fn.lower(x, k)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = cost_analysis(compiled)
+    coll = collective_bytes(compiled.as_text())
+    analytic = conv_partition_costs(spec, n_axis)[partition]
+    result = {
+        "cell": name, "kind": "conv_grad", "algorithm": algorithm,
+        "partition": partition, "axis": axis, "n_axis": n_axis,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(mesh.devices.size),
+        "spec": dataclasses.asdict(spec),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+        },
+        "analytic": analytic,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{name}__{'multipod' if multi_pod else 'pod'}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=2))
+    print(f"[dryrun] {tag}: compile={t_compile:.0f}s "
+          f"coll/dev={coll['total']:.3e}B "
+          f"halo/dev={analytic['halo_bytes_per_device']:.3e}B")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
+    ap.add_argument("--conv", default=None,
+                    help="compile a sharded_conv2d cell instead of an LM "
+                         f"cell: one of {sorted(CONV_CELLS)} or 'all'")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
@@ -191,6 +277,25 @@ def main():
     ap.add_argument("--out", default=str(RESULTS))
     args = ap.parse_args()
     out_dir = pathlib.Path(args.out)
+
+    if args.conv:
+        names = sorted(CONV_CELLS) if args.conv == "all" else [args.conv]
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = []
+        for name in names:
+            for mp in meshes:
+                tag = f"{name}__{'multipod' if mp else 'pod'}"
+                try:
+                    run_conv_cell(name, mp, out_dir)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[dryrun] {tag}: FAILED {e}")
+                    traceback.print_exc()
+        if failures:
+            raise SystemExit(f"{len(failures)} conv dry-run cells failed: "
+                             + ", ".join(t for t, _ in failures))
+        print(f"[dryrun] all {len(names) * len(meshes)} conv cells OK")
+        return
 
     cells = []
     archs = list(ARCHS) if args.all or not args.arch else [args.arch]

@@ -31,10 +31,25 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(shape=None, axes=None) -> Mesh:
-    """Small mesh over whatever devices exist (tests, examples)."""
+    """Small mesh over whatever devices exist (tests, examples).
+
+    shape=None uses every device on a 1-D "data" axis.  An explicit
+    shape without axes gets generated axis names ("ax0", "ax1", ...) —
+    passing axes=None through to Mesh() used to crash.
+    """
     devices = jax.devices()
     if shape is None:
         shape = (len(devices),)
         axes = axes or ("data",)
+    shape = tuple(shape)
+    if axes is None:
+        axes = tuple(f"ax{i}" for i in range(len(shape)))
+    axes = tuple(axes)
+    if len(axes) != len(shape):
+        raise ValueError(f"mesh shape {shape} needs {len(shape)} axis "
+                         f"names, got {axes}")
     n = int(np.prod(shape))
+    if n > len(devices):
+        raise ValueError(f"need {n} devices for host mesh {shape}, "
+                         f"have {len(devices)}")
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -59,12 +59,15 @@ def init_conv2d(key, k_h: int, k_w: int, c_in: int, c_out: int,
 
 
 def conv2d_layer(p: dict, x: jnp.ndarray, *, stride=1, padding="SAME",
-                 algorithm: str = "auto") -> jnp.ndarray:
+                 algorithm: str = "auto",
+                 partition: Optional[str] = None) -> jnp.ndarray:
     """One conv block through the unified front-end (repro.core.conv_api):
-    padding, geometry validation, and algorithm dispatch all live there —
-    models never hand-roll them."""
+    padding, geometry validation, algorithm dispatch AND mesh
+    partitioning (DESIGN.md §6) all live there — models never hand-roll
+    them.  partition=None is rules-aware: under ``parallel.axes``
+    rules the conv shards itself; without a mesh it is single-device."""
     y = conv2d(x, p["w"].astype(x.dtype), stride=stride, padding=padding,
-               algorithm=algorithm)
+               algorithm=algorithm, partition=partition)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

@@ -1,0 +1,223 @@
+"""Distributed conv2d execution: shard_map MEC with spatial halo exchange
+(DESIGN.md §6).
+
+The paper's Solution B parallelizes the o_h shifted GEMMs across threads
+on one device; this module is the same idea at mesh scale.  One entry
+point, :func:`sharded_conv2d`, partitions a convolution over ONE mesh
+axis in one of three ways:
+
+``batch``    input sharded on ``i_n``; kernel replicated.  No forward
+             communication; the kernel cotangent is psum'd by the
+             shard_map transpose.
+``channel``  kernel sharded on ``k_c`` (output channels); input
+             replicated.  No forward communication; the *input*
+             cotangent is psum'd in the backward pass.
+``spatial``  input sharded on ``i_h`` rows.  Because MEC's compact L
+             (Eq. 3) lowers whole input rows, a device only needs the
+             first ``k_h - s_h`` rows of its lower neighbour — the same
+             overlap the ``fused2`` kernel fetches as its halo — which
+             are exchanged with one ``lax.ppermute`` before the local
+             conv.  The backward pass routes the halo cotangent back
+             through the transposed permute automatically.
+
+Each mode wraps ``repro.core.conv_api.conv2d`` as its per-device body,
+so every ``algorithm=`` backend (direct/im2col/fft/winograd/mec/Pallas)
+and the MEC custom VJP compose with the partitioning unchanged.  With no
+mesh (or a 1-way axis under ``partition="auto"``) the call degrades to
+the single-device ``conv2d`` — the same model code runs everywhere.
+
+Axis resolution: ``batch`` prefers the rules' first data-parallel axis,
+``channel``/``spatial`` prefer the tensor-parallel axis; on a 1-D mesh
+any partition uses its only axis.  ``partition="auto"`` asks
+``repro.launch.costmodel.pick_conv_partition`` (per-device memory +
+halo/collective bytes) which viable partition is cheapest.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
+from repro.core.conv_api import apply_padding, conv2d, _norm_stride
+from repro.core.convspec import ConvSpec, spec_of
+from repro.parallel.axes import ShardingRules, current_rules
+
+PARTITIONS = ("batch", "channel", "spatial")
+
+
+def spatial_halo_rows(k_h: int, s_h: int) -> int:
+    """Input rows a device needs from its lower neighbour: the window of
+    the last local output row overhangs by ``k_h - s_h`` rows (0 when
+    stride covers the kernel)."""
+    return max(0, k_h - s_h)
+
+
+def partition_viable(spec: ConvSpec, partition: str, n_dev: int) -> bool:
+    """Can ``spec`` be split ``n_dev``-ways along ``partition``?
+
+    ``spatial`` additionally needs the per-device row count to be a
+    stride multiple (so every device emits the same number of output
+    rows) and the halo to fit in the immediate neighbour (single-hop
+    ``ppermute``).
+    """
+    if n_dev < 1:
+        return False
+    if partition == "batch":
+        return spec.i_n % n_dev == 0
+    if partition == "channel":
+        return spec.k_c % n_dev == 0
+    if partition == "spatial":
+        if spec.i_h % n_dev:
+            return False
+        h_loc = spec.i_h // n_dev
+        return h_loc % spec.s_h == 0 and \
+            spatial_halo_rows(spec.k_h, spec.s_h) <= h_loc
+    raise ValueError(f"unknown partition {partition!r}; "
+                     f"expected one of {PARTITIONS}")
+
+
+def default_axis(partition: str, mesh: Mesh,
+                 rules: Optional[ShardingRules] = None) -> str:
+    """Mesh axis a partition runs over when the caller names none."""
+    names = mesh.axis_names
+    if partition == "batch":
+        prefer = tuple(rules.dp_axes) if rules else ()
+        prefer += ("data", "pod")
+    else:  # channel / spatial live on the tensor-parallel axis
+        prefer = (rules.tp_axis,) if rules and rules.tp_axis else ()
+        prefer += ("model",)
+    for a in prefer:
+        if a in names:
+            return a
+    if len(names) == 1:
+        return names[0]
+    raise ValueError(
+        f"cannot infer a mesh axis for partition={partition!r} on mesh "
+        f"axes {names}; pass axis= explicitly")
+
+
+def _single_device(x, kernel, stride, algorithm, solution, interpret,
+                   precision):
+    # x is already padded; partition="none" keeps the call from
+    # re-entering the sharded path under installed rules.
+    return conv2d(x, kernel, stride=stride, padding="VALID",
+                  algorithm=algorithm, solution=solution,
+                  interpret=interpret, precision=precision,
+                  partition="none")
+
+
+def sharded_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
+                   padding="VALID", algorithm: str = "auto",
+                   solution: str = "auto", partition: str = "auto",
+                   axis: Optional[str] = None, mesh: Optional[Mesh] = None,
+                   rules: Optional[ShardingRules] = None,
+                   interpret: Optional[bool] = None,
+                   precision=None) -> jnp.ndarray:
+    """Distributed 2-D convolution, NHWC x HWIO -> NHWC.
+
+    partition: 'batch' | 'channel' | 'spatial' | 'auto'.  'auto' asks the
+    cost model for the cheapest viable split (and degrades to the
+    single-device ``conv2d`` when none is, or when there is no mesh).
+    An *explicit* partition that cannot split the geometry raises.
+    mesh/rules default to the installed ``parallel.axes`` rules.
+    """
+    if rules is None:
+        rules = current_rules()
+    if mesh is None and rules is not None:
+        mesh = rules.mesh
+
+    s_h, s_w = _norm_stride(stride)
+    k_h, k_w = kernel.shape[0], kernel.shape[1]
+    x = apply_padding(inp, k_h, k_w, s_h, s_w, padding)
+    spec = spec_of(x, kernel, (s_h, s_w))
+
+    if mesh is None:
+        if partition not in PARTITIONS + ("auto",):
+            raise ValueError(f"unknown partition {partition!r}")
+        return _single_device(x, kernel, (s_h, s_w), algorithm, solution,
+                              interpret, precision)
+
+    if partition == "auto":
+        # Lazy import mirrors conv_api's costmodel use: the launch layer
+        # is consulted at call time, never at core/parallel import time.
+        from repro.launch.costmodel import pick_conv_partition
+        sizes = {}
+        for part in PARTITIONS:
+            try:
+                ax = axis or default_axis(part, mesh, rules)
+            except ValueError:
+                continue      # no resolvable axis -> mode not a candidate
+            sizes[part] = (ax, int(mesh.shape[ax]))
+        picked = pick_conv_partition(
+            spec, {p: n for p, (_, n) in sizes.items()},
+            dtype_bytes=jnp.dtype(x.dtype).itemsize)
+        if picked is None:
+            return _single_device(x, kernel, (s_h, s_w), algorithm,
+                                  solution, interpret, precision)
+        partition, (axis, n_dev) = picked, sizes[picked]
+    else:
+        if partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {partition!r}; expected "
+                             f"one of {PARTITIONS + ('auto',)}")
+        axis = axis or default_axis(partition, mesh, rules)
+        n_dev = int(mesh.shape[axis])
+        if not partition_viable(spec, partition, n_dev):
+            raise ValueError(
+                f"partition {partition!r} cannot split {spec} over "
+                f"{n_dev} devices (axis {axis!r}); see "
+                "parallel.conv.partition_viable")
+
+    def body(xb, kb):
+        return _single_device(xb, kb, (s_h, s_w), algorithm, solution,
+                              interpret, precision)
+
+    if partition == "batch":
+        f = shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                      out_specs=P(axis), check_vma=False)
+        return f(x, kernel)
+
+    if partition == "channel":
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(P(), P(None, None, None, axis)),
+                      out_specs=P(None, None, None, axis), check_vma=False)
+        return f(x, kernel)
+
+    # spatial: halo exchange then a VALID conv per device.
+    halo = spatial_halo_rows(k_h, s_h)
+    h_loc = spec.i_h // n_dev
+
+    def spatial_body(xb, kb):
+        if halo:
+            # Each device ships its first `halo` rows one step down the
+            # axis; the last device receives zeros (non-ring permute) and
+            # its overhanging output rows are sliced off below.
+            nxt = lax.ppermute(xb[:, :halo], axis,
+                               [(d + 1, d) for d in range(n_dev - 1)])
+            xb = jnp.concatenate([xb, nxt], axis=1)
+        out = body(xb, kb)
+        assert out.shape[1] == h_loc // s_h, (out.shape, h_loc, s_h)
+        return out
+
+    f = shard_map(spatial_body, mesh=mesh,
+                  in_specs=(P(None, axis), P()),
+                  out_specs=P(None, axis), check_vma=False)
+    out = f(x, kernel)
+    # n_dev * (h_loc / s_h) rows were produced; the trailing ones (windows
+    # that overran the input into the zero halo) are not real outputs.
+    return out[:, :spec.o_h]
+
+
+def conv_partition_specs(partition: str, axis: str) -> Tuple[P, P, P]:
+    """(input, kernel, output) PartitionSpecs of one partition mode —
+    what ``jax.jit`` in_shardings should look like so GSPMD does not
+    reshard on entry (used by launch.dryrun)."""
+    if partition == "batch":
+        return P(axis), P(), P(axis)
+    if partition == "channel":
+        return P(), P(None, None, None, axis), P(None, None, None, axis)
+    if partition == "spatial":
+        return P(None, axis), P(), P(None, axis)
+    raise ValueError(f"unknown partition {partition!r}")

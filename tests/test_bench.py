@@ -148,3 +148,70 @@ def test_committed_smoke_baseline_is_valid_and_complete():
     want = {(sc.name, alg) for sc in resolve_suite("smoke")
             for alg in sc.algorithms}
     assert got == want
+
+
+def test_dist_suite_layers_and_smoke_cells():
+    """The dist suite covers cv1-cv12 at 2/8/256-way plus the 2-device
+    smoke cells, one per partition mode (DESIGN.md §6)."""
+    dist = resolve_suite("dist")
+    names = {sc.name for sc in dist}
+    for layer in CV_LAYERS:
+        for n in (2, 8, 256):
+            assert f"{layer}_d{n}" in names
+    for part in ("batch", "channel", "spatial"):
+        sc = next(s for s in dist if s.name == f"smoke2_{part}")
+        assert sc.partition == part and sc.n_dev == 2
+    assert all(sc.partition is not None for sc in dist)
+
+
+def test_dist_measure_emits_analytic_fields_without_devices():
+    """A 256-way cell on this 1-device process still carries the exact
+    per-device/halo analytics (timing/HLO skipped), and the report
+    schema accepts the block."""
+    sc = next(s for s in resolve_suite("dist") if s.name == "cv9_d256")
+    rec = measure(sc, "mecB", with_hlo=True, with_timing=True)
+    assert rec["partition"] == "spatial" and rec["n_dev"] == 256
+    assert rec["us_per_call"] is None and rec["hlo_flops"] is None
+    # halo = (k_h - s_h) input rows per device: 2 * 56 * 64 * 4 bytes
+    assert rec["halo_bytes_per_device"] == 2 * 56 * 64 * 4
+    assert rec["per_device_overhead_elems"] > 0
+    assert rec["comm_bytes_per_device"] >= rec["halo_bytes_per_device"]
+    doc = make_report("dist", [rec], {})
+    assert validate_report(doc) == []
+
+
+def test_dist_fields_gated_exactly_by_check():
+    sc = next(s for s in resolve_suite("dist") if s.name == "cv9_d2")
+    rec = measure(sc, "mecB", with_hlo=False, with_timing=False)
+    doc = make_report("dist", [rec], {})
+    base = json.loads(json.dumps(doc))
+    fails, _ = compare(doc, base, schema_only_on_timing=True)
+    assert fails == []
+    doc2 = json.loads(json.dumps(doc))
+    doc2["results"][0]["halo_bytes_per_device"] += 1
+    fails, _ = compare(doc2, base, schema_only_on_timing=True)
+    assert any("halo_bytes_per_device" in f for f in fails)
+
+
+def test_dist_record_missing_sibling_field_rejected():
+    sc = next(s for s in resolve_suite("dist") if s.name == "cv9_d2")
+    rec = measure(sc, "mecB", with_hlo=False, with_timing=False)
+    broken = dict(rec)
+    del broken["halo_bytes_per_device"]
+    errs = validate_report(make_report_unchecked("dist", [broken]))
+    assert any("distributed cell missing" in e for e in errs)
+
+
+def make_report_unchecked(suite, results):
+    from repro.bench.report import SCHEMA_VERSION, environment_fingerprint
+    return {"schema_version": SCHEMA_VERSION, "suite": suite,
+            "environment": environment_fingerprint(), "harness": {},
+            "results": results}
+
+
+def test_committed_dist_baseline_is_valid():
+    doc = json.loads((REPO / "benchmarks" / "baselines" /
+                      "dist.json").read_text())
+    assert validate_report(doc) == []
+    assert doc["suite"] == "dist"
+    assert len(doc["results"]) == 12 * 3 + 3 * 2

@@ -94,3 +94,31 @@ def test_sweep_results_complete_if_present():
         assert res["per_device"]["flops"] > 0, f.name
         assert res["roofline"]["dominant"] in ("compute", "memory",
                                                "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_conv_cells_subprocess(tmp_path):
+    """Real .lower().compile() of sharded_conv2d (fwd + grad) on the
+    multi-pod 512-chip mesh: the spatial cell must show halo traffic
+    (collective-permute) and every cell must carry the analytic
+    per-device/halo fields from the partition cost model."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--conv", "all",
+         "--multi-pod", "--out", str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for name, partition in (("conv_batch", "batch"),
+                            ("conv_channel", "channel"),
+                            ("conv_spatial", "spatial")):
+        res = json.loads((tmp_path / f"{name}__multipod.json").read_text())
+        assert res["n_chips"] == 512
+        assert res["partition"] == partition
+        assert res["analytic"]["viable"] is True
+        assert res["analytic"]["flops_per_device"] > 0
+        if partition == "spatial":
+            assert res["analytic"]["halo_bytes_per_device"] > 0
+            assert res["per_device"]["collectives"].get(
+                "collective-permute", 0) > 0
+        else:
+            assert res["analytic"]["halo_bytes_per_device"] == 0

@@ -92,3 +92,23 @@ def test_lowered_gemm_matches_fused():
     b = mec_conv2d_tpu(inp, ker, 1, mode="lowered", interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_accumulator_budget_env_and_default(monkeypatch):
+    """pick_w_blk's VMEM accumulator budget is env-configurable
+    (REPRO_MEC_ACC_BYTES) instead of a hard-coded ~2 MiB."""
+    from repro.kernels import ops
+    monkeypatch.delenv(ops.ACC_BYTES_ENV, raising=False)
+    # off-TPU default: the v5e 16 MiB/8 heuristic
+    assert ops.accumulator_budget() == 2 << 20
+    assert ops.pick_w_blk(4096, 8) == 512          # hits the 512 cap
+    monkeypatch.setenv(ops.ACC_BYTES_ENV, "4096")
+    assert ops.accumulator_budget() == 4096
+    assert ops.pick_w_blk(4096, 8) == 128          # 4096 / (4*8) = 128
+    monkeypatch.setenv(ops.ACC_BYTES_ENV, "0x1000")  # hex accepted
+    assert ops.accumulator_budget() == 4096
+    monkeypatch.setenv(ops.ACC_BYTES_ENV, "-1")
+    with pytest.raises(ValueError):
+        ops.accumulator_budget()
+    # explicit argument still wins over everything
+    assert ops.pick_w_blk(4096, 8, target_bytes=2 << 20) == 512
