@@ -40,8 +40,9 @@ EXACT_FIELDS = ("dtype", "spec", "run_spec", "out_shape", "overhead_elems",
 
 # Distributed-cell analytics (suite ``dist``): exact, but only gated when
 # the baseline record carries them (schema_version 1 baselines predate
-# these fields).
-OPTIONAL_EXACT_FIELDS = ("partition", "n_dev", "halo_bytes_per_device",
+# these fields; ``n_dev_axes`` additionally predates composite 2-D cells).
+OPTIONAL_EXACT_FIELDS = ("partition", "n_dev", "n_dev_axes",
+                         "halo_bytes_per_device",
                          "per_device_overhead_elems",
                          "comm_bytes_per_device", "auto_partition")
 

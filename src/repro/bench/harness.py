@@ -16,6 +16,7 @@ schema-only checked.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -100,29 +101,44 @@ def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
         "hlo_bytes": None,
     }
     mesh = None
+    mesh_axis = None
     if sc.partition is not None:
         # Distributed cell: per-device/halo analytics (DESIGN.md §6) are
         # always emitted; execution additionally needs enough devices.
-        dist = conv_partition_costs(sc.spec, sc.n_dev, dtype_bytes)
-        entry = dist[sc.partition]
-        record["partition"] = sc.partition
-        record["n_dev"] = int(sc.n_dev)
+        # Composite cells carry a component tuple + per-sub-axis device
+        # tuple; records serialize them via partition_name / n_dev_axes.
+        from repro.parallel.conv import (normalize_partition,
+                                         partition_name, partition_viable)
+        parts = normalize_partition(sc.partition)
+        composite = len(parts) > 1
+        sizes = tuple(sc.n_dev) if composite else (int(sc.n_dev),)
+        n_total = math.prod(sizes)
+        dist = conv_partition_costs(
+            sc.spec, sizes if composite else sizes[0], dtype_bytes)
+        entry = dist[parts if composite else parts[0]]
+        record["partition"] = partition_name(parts)
+        record["n_dev"] = int(n_total)
+        record["n_dev_axes"] = [int(n) for n in sizes]
         record["halo_bytes_per_device"] = entry["halo_bytes_per_device"]
         record["per_device_overhead_elems"] = \
             entry["per_device_overhead_elems"]
         record["comm_bytes_per_device"] = (
             entry["comm_bytes_fwd_per_device"]
             + entry["comm_bytes_bwd_per_device"])
-        record["auto_partition"] = pick_conv_partition(
-            sc.spec, {p: sc.n_dev for p in ("batch", "channel", "spatial")},
-            dtype_bytes)
-        from repro.parallel.conv import partition_viable
-        if sc.n_dev > jax.device_count() or \
-                not partition_viable(sc.run_spec, sc.partition, sc.n_dev):
+        candidates = {p: n_total for p in ("batch", "channel", "spatial")}
+        if composite:
+            from repro.parallel.conv import COMPOSITE_PARTITIONS
+            candidates.update({c: sizes for c in COMPOSITE_PARTITIONS})
+        auto = pick_conv_partition(sc.spec, candidates, dtype_bytes)
+        record["auto_partition"] = \
+            None if auto is None else partition_name(auto)
+        if n_total > jax.device_count() or \
+                not partition_viable(sc.run_spec, parts, sc.n_dev):
             with_hlo = with_timing = False
         else:
             from repro.launch.mesh import make_host_mesh
-            mesh = make_host_mesh(shape=(sc.n_dev,))
+            mesh = make_host_mesh(shape=sizes)
+            mesh_axis = mesh.axis_names if composite else None
     if not (with_hlo or with_timing):
         return record
 
@@ -131,7 +147,7 @@ def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
         from repro.parallel.conv import sharded_conv2d
         fn = jax.jit(lambda i, k: sharded_conv2d(
             i, k, stride=stride, partition=sc.partition, mesh=mesh,
-            interpret=interpret, **kwargs))
+            axis=mesh_axis, interpret=interpret, **kwargs))
     else:
         fn = jax.jit(lambda i, k: conv2d(i, k, stride=stride,
                                          interpret=interpret, **kwargs))

@@ -41,15 +41,24 @@ RESULT_FIELDS = {
 
 # Distributed-cell fields (suite ``dist``, DESIGN.md §6): optional so
 # schema_version 1 baselines stay valid, but type-checked when present
-# and emitted as a block (partition present => all present).
+# and emitted as a block (partition present => all present).  Composite
+# 2-D cells serialize the component tuple as "batch+spatial" and their
+# per-sub-axis split as n_dev_axes (n_dev stays the device product).
 OPTIONAL_RESULT_FIELDS = {
     "partition": str,
     "n_dev": int,
+    "n_dev_axes": list,
     "halo_bytes_per_device": _NUM,
     "per_device_overhead_elems": _NUM,
     "comm_bytes_per_device": _NUM,
     "auto_partition": (str, type(None)),
 }
+
+# Fields newer than the first dist baselines: type-checked when present
+# but NOT required by the partition-present block rule, so a
+# pre-composite baseline still validates (and check.py can gate it
+# leniently as promised).
+_BLOCK_EXEMPT_FIELDS = ("n_dev_axes",)
 
 SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
 
@@ -129,7 +138,8 @@ def validate_report(doc: Dict) -> List[str]:
                 errs.append(f"{where}.{field} has type "
                             f"{type(rec[field]).__name__}")
         if "partition" in rec:
-            missing = [f for f in OPTIONAL_RESULT_FIELDS if f not in rec]
+            missing = [f for f in OPTIONAL_RESULT_FIELDS
+                       if f not in rec and f not in _BLOCK_EXEMPT_FIELDS]
             if missing:
                 errs.append(f"{where}: distributed cell missing {missing}")
         for sf in ("spec", "run_spec"):

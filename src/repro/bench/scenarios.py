@@ -23,15 +23,18 @@ Suites (resolve with :func:`resolve_suite`):
 ``smoke``        CI subset: 3 small layers x all algorithms, < 2 min
 ``dist``         distributed execution (DESIGN.md §6): per-device
                  overhead + halo-bytes analytics on 2/8/256-way spatial
-                 partitions of cv1-cv12, plus 2-device smoke cells (one
-                 per partition mode) that are actually timed when the
-                 process has >= 2 devices
+                 partitions of cv1-cv12 and on composite 2-D partitions
+                 (batch x spatial / batch x channel / spatial x channel
+                 over two mesh axes), plus 2-device smoke cells (one per
+                 1-D partition mode) and 2x2-device composite smoke
+                 cells that are actually timed when the process has
+                 enough devices
 ===============  ===========================================================
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple, Union
 
 from repro.core.convspec import ConvSpec
 
@@ -97,10 +100,13 @@ class Scenario:
     dtype: str = "float32"
     weight: int = 1                # Table-3 occurrence count (else 1)
     # Distributed cells (suite ``dist``): partition mode + device count.
-    # Analytic per-device/halo fields are always emitted for these;
-    # timing additionally needs n_dev <= jax.device_count().
-    partition: Optional[str] = None
-    n_dev: int = 1
+    # Composite 2-D cells carry a component tuple (from
+    # ``parallel.conv.COMPOSITE_PARTITIONS``) and a matching per-sub-axis
+    # device tuple.  Analytic per-device/halo fields are always emitted
+    # for these; timing additionally needs prod(n_dev) <=
+    # jax.device_count().
+    partition: Union[str, Tuple[str, ...], None] = None
+    n_dev: Union[int, Tuple[int, ...]] = 1
 
 
 def layer_spec(name: str, batch: int = 1,
@@ -197,14 +203,46 @@ def _dist() -> Tuple[Scenario, ...]:
                 name=f"{layer}_d{n_dev}", spec=spec,
                 run_spec=layer_spec(layer, channel_cap=16),
                 algorithms=("mecB",), partition="spatial", n_dev=n_dev))
+    # Composite 2-D analytic sweep (DESIGN.md §6 "composite partitions"):
+    # batch x spatial for every Table-2 layer at batch 8 over a 2x2 mesh
+    # tile, plus batch x channel on the channel-heavy layers and
+    # spatial x channel on the large-plane layers.  Like the 1-D sweep
+    # these are never timed at scale on CI — the per-device overhead /
+    # halo / comm analytics are the deliverable, gated exactly.
+    for layer in CV_LAYERS:
+        out.append(Scenario(
+            name=f"{layer}_bs2x2", spec=layer_spec(layer, batch=8),
+            run_spec=layer_spec(layer, batch=8, channel_cap=16),
+            algorithms=("mecB",), partition=("batch", "spatial"),
+            n_dev=(2, 2)))
+    for layer, n_dev in (("cv5", (2, 4)), ("cv6", (2, 4)),
+                         ("cv12", (2, 4))):
+        out.append(Scenario(
+            name=f"{layer}_bc{n_dev[0]}x{n_dev[1]}",
+            spec=layer_spec(layer, batch=8),
+            run_spec=layer_spec(layer, batch=8, channel_cap=16),
+            algorithms=("mecB",), partition=("batch", "channel"),
+            n_dev=n_dev))
+    for layer in ("cv4", "cv8"):
+        out.append(Scenario(
+            name=f"{layer}_sc2x2", spec=layer_spec(layer),
+            run_spec=layer_spec(layer, channel_cap=16),
+            algorithms=("mecB",), partition=("spatial", "channel"),
+            n_dev=(2, 2)))
     # CI-affordable 2-device smoke cells: tiny geometry every partition
     # mode can split, actually executed + timed when the process has two
-    # devices (CI forces --xla_force_host_platform_device_count=2).
+    # devices, plus 2x2 composite smoke cells timed under four (CI
+    # forces --xla_force_host_platform_device_count=4).
     small = ConvSpec(2, 16, 16, 4, 3, 3, 8, 1, 1)
     for part in ("batch", "channel", "spatial"):
         out.append(Scenario(
             name=f"smoke2_{part}", spec=small, run_spec=small,
             algorithms=("mecB", "mec_fused"), partition=part, n_dev=2))
+    for comp in (("batch", "spatial"), ("batch", "channel"),
+                 ("spatial", "channel")):
+        out.append(Scenario(
+            name=f"smoke4_{comp[0]}_{comp[1]}", spec=small, run_spec=small,
+            algorithms=("mecB", "mec_fused"), partition=comp, n_dev=(2, 2)))
     return tuple(out)
 
 

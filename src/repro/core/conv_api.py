@@ -80,27 +80,32 @@ def apply_padding(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int, s_w: int,
 # MEC custom VJP (shared by the reference and all Pallas variants)
 # ---------------------------------------------------------------------------
 
-def _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret):
+def _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret,
+                 precision):
     if variant == "mec":
-        return _mec_reference(inp, kernel, (s_h, s_w), solution=solution)
+        return _mec_reference(inp, kernel, (s_h, s_w), solution=solution,
+                              precision=precision)
     from repro.kernels.ops import mec_conv2d_tpu
     mode = variant[len("mec_"):]          # lowered | fused | fused2
     return mec_conv2d_tpu(inp, kernel, (s_h, s_w), mode=mode,
-                          interpret=interpret)
+                          interpret=interpret, precision=precision)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def _mec_conv(inp, kernel, s_h, s_w, variant, solution, interpret):
-    return _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _mec_conv(inp, kernel, s_h, s_w, variant, solution, interpret,
+              precision):
+    return _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret,
+                        precision)
 
 
-def _mec_fwd(inp, kernel, s_h, s_w, variant, solution, interpret):
-    out = _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret)
+def _mec_fwd(inp, kernel, s_h, s_w, variant, solution, interpret, precision):
+    out = _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret,
+                       precision)
     return out, (inp, kernel)
 
 
 def _mec_input_grad(g: jnp.ndarray, kernel: jnp.ndarray, s_h: int, s_w: int,
-                    i_h: int, i_w: int) -> jnp.ndarray:
+                    i_h: int, i_w: int, precision=None) -> jnp.ndarray:
     """dL/dI as a transposed MEC conv: stride-dilate the cotangent, pad it
     fully, and MEC-convolve with the spatially-flipped kernel whose
     channel axes are swapped (HWIO -> HWOI)."""
@@ -115,14 +120,15 @@ def _mec_input_grad(g: jnp.ndarray, kernel: jnp.ndarray, s_h: int, s_w: int,
         gd = g32
     gp = jnp.pad(gd, ((0, 0), (k_h - 1, k_h - 1), (k_w - 1, k_w - 1), (0, 0)))
     k_t = jnp.transpose(kernel[::-1, ::-1], (0, 1, 3, 2)).astype(jnp.float32)
-    di = _mec_reference(gp, k_t, (1, 1))  # (n, (o_h-1)s_h + k_h, ..., i_c)
+    # (n, (o_h-1)s_h + k_h, ..., i_c)
+    di = _mec_reference(gp, k_t, (1, 1), precision=precision)
     # Input rows/cols beyond the last kernel window receive zero gradient.
     return jnp.pad(di, ((0, 0), (0, i_h - di.shape[1]),
                         (0, i_w - di.shape[2]), (0, 0)))
 
 
 def _mec_weight_grad(inp: jnp.ndarray, g: jnp.ndarray, s_h: int, s_w: int,
-                     k_h: int, k_w: int) -> jnp.ndarray:
+                     k_h: int, k_w: int, precision=None) -> jnp.ndarray:
     """dL/dK from the compact L (Eq. 3): for each kernel row r, the
     stride-s_h shifted view of L against the cotangent — the same
     k_h-decomposition the Pallas kernels use, run in reverse."""
@@ -135,15 +141,17 @@ def _mec_weight_grad(inp: jnp.ndarray, g: jnp.ndarray, s_h: int, s_w: int,
         lr = lax.slice_in_dim(low32, r, r + s_h * (o_h - 1) + 1,
                               stride=s_h, axis=2)  # (n, o_w, o_h, k_w, i_c)
         rows.append(jnp.einsum("nwhjc,nhwo->jco", lr, g32,
+                               precision=precision,
                                preferred_element_type=jnp.float32))
     return jnp.stack(rows, axis=0)        # (k_h, k_w, i_c, k_c)
 
 
-def _mec_bwd(s_h, s_w, variant, solution, interpret, res, g):
+def _mec_bwd(s_h, s_w, variant, solution, interpret, precision, res, g):
     inp, kernel = res
-    d_inp = _mec_input_grad(g, kernel, s_h, s_w, inp.shape[1], inp.shape[2])
+    d_inp = _mec_input_grad(g, kernel, s_h, s_w, inp.shape[1], inp.shape[2],
+                            precision)
     d_ker = _mec_weight_grad(inp, g, s_h, s_w, kernel.shape[0],
-                             kernel.shape[1])
+                             kernel.shape[1], precision)
     return d_inp.astype(inp.dtype), d_ker.astype(kernel.dtype)
 
 
@@ -157,8 +165,10 @@ _mec_conv.defvjp(_mec_fwd, _mec_bwd)
 def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
            padding: Padding = "VALID", algorithm: str = "auto",
            solution: str = "auto", interpret: Optional[bool] = None,
-           precision=None, partition: Optional[str] = None,
-           partition_axis: Optional[str] = None) -> jnp.ndarray:
+           precision=None,
+           partition: Union[str, Tuple[str, ...], None] = None,
+           partition_axis: Union[str, Tuple[str, ...], None] = None
+           ) -> jnp.ndarray:
     """2-D convolution, NHWC x HWIO -> NHWC.
 
     inp: (i_n, i_h, i_w, i_c); kernel: (k_h, k_w, i_c, k_c).
@@ -171,12 +181,16 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
 
     partition routes through the distributed layer
     (``repro.parallel.conv.sharded_conv2d``, DESIGN.md §6):
-    'batch' | 'channel' | 'spatial' | 'auto' split over the installed
+    'batch' | 'channel' | 'spatial' | a composite 2-tuple from
+    ``parallel.conv.COMPOSITE_PARTITIONS`` (e.g. ``("batch", "spatial")``
+    on a ``data x model`` mesh) | 'auto' split over the installed
     ``parallel.axes`` mesh (no mesh -> single-device no-op); 'none'
     forces single-device; None (default) is rules-aware — sharded 'auto'
-    exactly when ``parallel.axes.use_rules`` rules are installed, so the
+    exactly when ``parallel.axes.use_rules`` rules are installed (1-D
+    and composite candidates both enumerated by the cost model), so the
     same model code runs on a laptop and a pod.  partition_axis names the
-    mesh axis explicitly (else per-partition defaults apply).
+    mesh axis explicitly (a tuple, paired positionally, for composites;
+    else per-partition defaults apply).
     """
     if partition != "none":
         # Lazy import: parallel sits above core; call-time routing keeps
@@ -216,7 +230,8 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
                 "winograd F(2x2,3x3) requires a 3x3 kernel and stride 1; "
                 f"got kernel {(spec.k_h, spec.k_w)} stride {(s_h, s_w)}")
         return winograd_conv2d(x, kernel)
-    return _mec_conv(x, kernel, s_h, s_w, algorithm, solution, interpret)
+    return _mec_conv(x, kernel, s_h, s_w, algorithm, solution, interpret,
+                     precision)
 
 
 def conv2d_spec(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,

@@ -27,6 +27,11 @@ from repro.core.convspec import ConvSpec, spec_of
 # ("we found T around 100 to be a good threshold for latest GPUs")
 SOLUTION_T = 100
 
+# The valid ``solution=`` values (Algorithm 2 line 8); callers that
+# validate ahead of tracing (parallel.conv) import this rather than
+# duplicating the set.
+SOLUTIONS = ("A", "B", "auto")
+
 
 def mec_lower(inp: jnp.ndarray, k_w: int, s_w: int) -> jnp.ndarray:
     """Compact lowering, Algorithm 2 lines 4-6.

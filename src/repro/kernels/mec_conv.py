@@ -79,7 +79,7 @@ def mec_lower_pallas(inp: jnp.ndarray, k_w: int, s_w: int,
 # Shifted GEMM kernel over materialized L (paper-faithful)
 # ---------------------------------------------------------------------------
 
-def _gemm_kernel(l_ref, k_ref, o_ref):
+def _gemm_kernel(l_ref, k_ref, o_ref, *, precision):
     # l_ref: (1, w_blk, 1, kwic); k_ref: (1, kwic, k_c); o_ref: (1,1,w_blk,k_c)
     r = pl.program_id(3)
 
@@ -87,16 +87,18 @@ def _gemm_kernel(l_ref, k_ref, o_ref):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    acc = jnp.dot(l_ref[0, :, 0, :], k_ref[0],
+    acc = jnp.dot(l_ref[0, :, 0, :], k_ref[0], precision=precision,
                   preferred_element_type=jnp.float32)
     o_ref[0, 0] += acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k_h", "s_h", "w_blk", "interpret"))
+                   static_argnames=("k_h", "s_h", "w_blk", "interpret",
+                                    "precision"))
 def mec_gemm_pallas(low: jnp.ndarray, kernel_mat: jnp.ndarray,
                     k_h: int, s_h: int, w_blk: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True,
+                    precision=None) -> jnp.ndarray:
     """The o_h shifted GEMMs:  O[n,h] = sum_r L[n,:,h*s_h+r,:] @ K[r].
 
     low: (n, o_w, i_h, k_w*i_c)  (from mec_lower_pallas)
@@ -113,7 +115,7 @@ def mec_gemm_pallas(low: jnp.ndarray, kernel_mat: jnp.ndarray,
     o_w_p = o_w + pad_w
     grid = (i_n, o_h, o_w_p // w_blk, k_h)
     out = pl.pallas_call(
-        _gemm_kernel,
+        functools.partial(_gemm_kernel, precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, w_blk, 1, kwic),
@@ -132,7 +134,8 @@ def mec_gemm_pallas(low: jnp.ndarray, kernel_mat: jnp.ndarray,
 # Fused kernel: lowering in VMEM, no L in HBM (beyond-paper)
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(i_ref, k_ref, o_ref, *, k_w: int, s_w: int, w_blk: int):
+def _fused_kernel(i_ref, k_ref, o_ref, *, k_w: int, s_w: int, w_blk: int,
+                  precision):
     # i_ref: (1, 1, i_w, i_c) — one input row (h*s_h + r) in VMEM
     # k_ref: (1, kwic, k_c); o_ref: (1, 1, w_blk, k_c)
     r = pl.program_id(3)
@@ -151,7 +154,8 @@ def _fused_kernel(i_ref, k_ref, o_ref, *, k_w: int, s_w: int, w_blk: int):
         seg = lax.dynamic_slice(x, (base + j, 0), (span, i_c))
         cols.append(seg[::s_w])         # (w_blk, i_c)
     strip = jnp.stack(cols, axis=1).reshape(w_blk, k_w * i_c)
-    acc = jnp.dot(strip, k_ref[0], preferred_element_type=jnp.float32)
+    acc = jnp.dot(strip, k_ref[0], precision=precision,
+                  preferred_element_type=jnp.float32)
     o_ref[0, 0] += acc.astype(o_ref.dtype)
 
 
@@ -165,7 +169,8 @@ def _fused_kernel(i_ref, k_ref, o_ref, *, k_w: int, s_w: int, w_blk: int):
 # ---------------------------------------------------------------------------
 
 def _fused2_kernel(i_ref, halo_ref, k_ref, o_ref, *, k_w: int, s_w: int,
-                   s_h: int, w_blk: int, oh_blk: int, halo: int):
+                   s_h: int, w_blk: int, oh_blk: int, halo: int,
+                   precision):
     r = pl.program_id(3)
     w = pl.program_id(2)
 
@@ -189,15 +194,18 @@ def _fused2_kernel(i_ref, halo_ref, k_ref, o_ref, *, k_w: int, s_w: int,
             cols.append(seg[::s_w])
         strip = jnp.stack(cols, axis=1).reshape(w_blk, k_w * i_c)
         acc = acc.at[dh].set(
-            jnp.dot(strip, k_ref[0], preferred_element_type=jnp.float32))
+            jnp.dot(strip, k_ref[0], precision=precision,
+                    preferred_element_type=jnp.float32))
     o_ref[0] += acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "w_blk", "oh_blk", "interpret"))
+                   static_argnames=("stride", "w_blk", "oh_blk", "interpret",
+                                    "precision"))
 def mec_conv_fused2_pallas(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
                            w_blk: int = 128, oh_blk: int = 8,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = True,
+                           precision=None) -> jnp.ndarray:
     """h-blocked fused MEC conv (halo via second BlockSpec view)."""
     s_h, s_w = (stride, stride) if isinstance(stride, int) else stride
     i_n, i_h, i_w, i_c = inp.shape
@@ -208,7 +216,8 @@ def mec_conv_fused2_pallas(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
     if halo < 0 or halo > s_h * oh_blk:
         # non-overlapping kernels (or giant halo): fall back to v1
         return mec_conv_fused_pallas(inp, kernel, (s_h, s_w), w_blk=w_blk,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     precision=precision)
     oh_blk = min(oh_blk, o_h)
     w_blk = min(w_blk, o_w)
     pad_h = (-o_h) % oh_blk
@@ -225,7 +234,8 @@ def mec_conv_fused2_pallas(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
     grid = (i_n, n_hblocks, o_w_p // w_blk, k_h)
     out = pl.pallas_call(
         functools.partial(_fused2_kernel, k_w=k_w, s_w=s_w, s_h=s_h,
-                          w_blk=w_blk, oh_blk=oh_blk, halo=halo),
+                          w_blk=w_blk, oh_blk=oh_blk, halo=halo,
+                          precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, rows_blk, inp.shape[2], i_c),
@@ -245,10 +255,12 @@ def mec_conv_fused2_pallas(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "w_blk", "interpret"))
+                   static_argnames=("stride", "w_blk", "interpret",
+                                    "precision"))
 def mec_conv_fused_pallas(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
                           w_blk: int = 128,
-                          interpret: bool = True) -> jnp.ndarray:
+                          interpret: bool = True,
+                          precision=None) -> jnp.ndarray:
     """Fused MEC convolution: implicit lowering inside the GEMM pipeline.
 
     inp: (n, i_h, i_w, i_c) pre-padded; kernel: (k_h, k_w, i_c, k_c).
@@ -269,7 +281,8 @@ def mec_conv_fused_pallas(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
     kernel_mat = kernel.reshape(k_h, k_w * i_c, k_c)
     grid = (i_n, o_h, o_w_p // w_blk, k_h)
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, k_w=k_w, s_w=s_w, w_blk=w_blk),
+        functools.partial(_fused_kernel, k_w=k_w, s_w=s_w, w_blk=w_blk,
+                          precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, inp.shape[2], i_c),

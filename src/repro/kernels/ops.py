@@ -70,20 +70,33 @@ def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None) -> int:
     """Output-column block: fill the accumulator budget (device-queried /
     env-tunable via :func:`accumulator_budget`, ~2 MiB on v5e) with the
     f32 accumulator, rounded down to a multiple of 8 (sublane) and capped
-    at o_w."""
-    if target_bytes is None:
+    at o_w.
+
+    The 8-column sublane floor applies only to the *implicit* device
+    budget; an explicit ``target_bytes`` is a hard cap — the block never
+    exceeds it (down to the 1-column minimum, the smallest accumulator
+    that exists).
+    """
+    explicit = target_bytes is not None
+    if not explicit:
         target_bytes = accumulator_budget()
-    blk = max(8, min(512, target_bytes // max(1, 4 * k_c)))
-    blk = (blk // 8) * 8
+    blk = min(512, target_bytes // max(1, 4 * k_c))
+    if not explicit:
+        blk = max(8, blk)
+    if blk >= 8:
+        blk = (blk // 8) * 8
     return max(1, min(blk, o_w))
 
 
 def mec_conv2d_tpu(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
-                   mode: str = "fused", interpret=None) -> jnp.ndarray:
+                   mode: str = "fused", interpret=None,
+                   precision=None) -> jnp.ndarray:
     """MEC convolution with Pallas kernels.
 
     mode='lowered' is the paper-faithful path (L materialized in HBM,
     Eq. 3 memory observable); mode='fused' is the beyond-paper fused path.
+    precision reaches the in-kernel GEMMs (matters for bf16 operands on
+    the MXU; accumulation is f32 regardless).
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -94,15 +107,17 @@ def mec_conv2d_tpu(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
     w_blk = pick_w_blk(o_w, k_c)
     if mode == "fused":
         return mec_conv_fused_pallas(inp, kernel, (s_h, s_w), w_blk=w_blk,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     precision=precision)
     if mode == "fused2":   # h-blocked + halo: ~1x input fetch (EXPERIMENTS)
         return mec_conv_fused2_pallas(inp, kernel, (s_h, s_w), w_blk=w_blk,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      precision=precision)
     if mode == "lowered":
         low = mec_lower_pallas(inp, k_w, s_w, interpret=interpret)
         kernel_mat = kernel.reshape(k_h, k_w * i_c, k_c)
         out = mec_gemm_pallas(low, kernel_mat, k_h, s_h, w_blk=w_blk,
-                              interpret=interpret)
+                              interpret=interpret, precision=precision)
         return out.astype(inp.dtype)
     raise ValueError(f"unknown mode {mode!r}")
 

@@ -26,6 +26,7 @@ Conventions/assumptions (all documented in EXPERIMENTS.md):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict
 
 from repro.models.config import ModelConfig
@@ -262,7 +263,6 @@ def conv2d_algorithm_costs(spec) -> Dict[str, Dict[str, float]]:
         if alg == "winograd":
             flops = base * 4.0 / 9.0      # F(2x2,3x3): 16 mults per 36
         if alg == "fft":
-            import math
             hw = spec.i_h * spec.i_w
             planes = spec.i_n * spec.i_c + spec.i_c * spec.k_c \
                 + spec.i_n * spec.k_c
@@ -287,88 +287,154 @@ def _halo_rows(spec) -> int:
     return spatial_halo_rows(spec.k_h, spec.s_h)
 
 
-def conv_partition_costs(spec, n_dev: int, dtype_bytes: int = 4) -> Dict:
+def conv_partition_costs(spec, n_dev, dtype_bytes: int = 4) -> Dict:
     """Per-partition per-device cost terms for an ``n_dev``-way split.
 
-    Every mode is reported (with ``viable`` flagging whether the geometry
-    actually divides) so analytic benchmark fields stay defined on
-    non-divisible cells:
+    ``n_dev`` as an int evaluates the three 1-D modes (keys ``"batch"``/
+    ``"channel"``/``"spatial"``); a ``(n0, n1)`` tuple evaluates the
+    composite modes (keys from ``parallel.conv.COMPOSITE_PARTITIONS``,
+    component ``i`` split ``n_dev[i]``-ways).  Every mode is reported
+    (with ``viable`` flagging whether the geometry actually divides) so
+    analytic benchmark fields stay defined on non-divisible cells:
 
     * ``per_device_overhead_elems`` — MEC's compact L (Eq. 3) on the
       local geometry (note: ``channel`` does not shrink L — it splits
       only the kernel/output);
     * ``per_device_im2col_elems``   — Eq. 2 on the same local geometry;
     * ``halo_bytes_per_device``     — spatial halo, ``(k_h - s_h)`` input
-      rows per exchange (0 for batch/channel);
+      rows per exchange on the *local* batch shard (0 when no spatial
+      component);
     * ``comm_bytes_fwd/bwd_per_device`` — interconnect bytes per device:
       spatial pays the halo each way, batch psums the kernel cotangent,
-      channel psums the input cotangent;
+      channel psums the input cotangent.  Composites sum their
+      components' terms, each psum operand taken at the size the *other*
+      component leaves local (e.g. batch x channel psums a ``k_c/n1``
+      kernel shard and an ``i_n/n0`` input shard);
     * ``flops_per_device``.
     """
     import dataclasses as _dc
 
     from repro.core import memory
+    from repro.parallel.conv import COMPOSITE_PARTITIONS
 
     halo = _halo_rows(spec)
-    halo_bytes = spec.i_n * halo * spec.i_w * spec.i_c * dtype_bytes
-    kernel_bytes = spec.k_h * spec.k_w * spec.i_c * spec.k_c * dtype_bytes
-    input_bytes = spec.i_n * spec.i_h * spec.i_w * spec.i_c * dtype_bytes
-    flops_dev = memory.conv_flops(spec) / max(n_dev, 1)
 
     def ceil_div(a, b):
         return -(-a // b)
 
-    local = {
-        "batch": _dc.replace(spec, i_n=max(1, ceil_div(spec.i_n, n_dev))),
-        "channel": _dc.replace(spec, k_c=max(1, ceil_div(spec.k_c, n_dev))),
-        "spatial": _dc.replace(
-            spec, i_h=min(spec.i_h, ceil_div(spec.i_h, n_dev) + halo)),
-    }
-    comm = {
-        "batch": (0, kernel_bytes),
-        "channel": (0, input_bytes),
-        "spatial": (halo_bytes, halo_bytes + kernel_bytes),
-    }
-    out: Dict[str, Dict[str, float]] = {}
-    for part, lspec in local.items():
-        fwd, bwd = comm[part]
-        out[part] = {
-            "viable": bool(n_dev > 0 and _viable(spec, part, n_dev)),
-            "n_dev": int(n_dev),
+    def halo_row_bytes(i_n_local):
+        return i_n_local * halo * spec.i_w * spec.i_c * dtype_bytes
+
+    def one_mode(parts, sizes):
+        """Cost entry for a 1- or 2-component partition."""
+        by = dict(zip(parts, sizes))
+        n_b, n_s, n_c = by.get("batch", 1), by.get("spatial", 1), \
+            by.get("channel", 1)
+        i_n_loc = max(1, ceil_div(spec.i_n, n_b))
+        k_c_loc = max(1, ceil_div(spec.k_c, n_c))
+        lspec = _dc.replace(
+            spec, i_n=i_n_loc,
+            i_h=min(spec.i_h, ceil_div(spec.i_h, n_s) + halo),
+            k_c=k_c_loc)
+        # Spatial halo on the local batch shard; psum operands at the
+        # size the other component leaves local (ceil-sized, matching
+        # lspec, so analytics stay self-consistent on non-divisible
+        # cells).
+        halo_bytes = halo_row_bytes(i_n_loc) if "spatial" in by else 0
+        fwd = halo_bytes
+        bwd = halo_bytes
+        if "batch" in by or "spatial" in by:
+            # kernel cotangent psum'd over the input-sharding axes;
+            # operand is the (possibly channel-sharded) local kernel.
+            bwd += spec.k_h * spec.k_w * spec.i_c * k_c_loc * dtype_bytes
+        if "channel" in by:
+            # input cotangent psum'd over the channel axis; operand is
+            # the (possibly batch/spatially-sharded) local input.
+            bwd += i_n_loc * ceil_div(spec.i_h, max(n_s, 1)) \
+                * spec.i_w * spec.i_c * dtype_bytes
+        n_total = math.prod(max(n, 1) for n in sizes)
+        return {
+            "viable": bool(min(sizes) > 0
+                           and _viable(spec, parts if len(parts) > 1
+                                       else parts[0],
+                                       tuple(sizes) if len(parts) > 1
+                                       else sizes[0])),
+            "n_dev": int(n_total),
+            "n_dev_axes": [int(n) for n in sizes],
             "per_device_overhead_elems": float(memory.mec_overhead(lspec)),
             "per_device_im2col_elems": float(memory.im2col_overhead(lspec)),
-            "halo_bytes_per_device":
-                float(halo_bytes if part == "spatial" else 0),
+            "halo_bytes_per_device": float(halo_bytes),
             "comm_bytes_fwd_per_device": float(fwd),
             "comm_bytes_bwd_per_device": float(bwd),
-            "flops_per_device": float(flops_dev),
+            "flops_per_device": float(memory.conv_flops(spec) / n_total),
         }
+
+    out: Dict = {}
+    if isinstance(n_dev, int):
+        for part in ("batch", "channel", "spatial"):
+            out[part] = one_mode((part,), (n_dev,))
+    else:
+        sizes = tuple(int(n) for n in n_dev)
+        if len(sizes) != 2:
+            raise ValueError(f"composite n_dev must be a 2-tuple, got "
+                             f"{n_dev!r}")
+        for comp in COMPOSITE_PARTITIONS:
+            out[comp] = one_mode(comp, sizes)
     return out
 
 
-def _viable(spec, partition: str, n_dev: int) -> bool:
+def _viable(spec, partition, n_dev) -> bool:
     from repro.parallel.conv import partition_viable
     return partition_viable(spec, partition, n_dev)
 
 
-def pick_conv_partition(spec, axis_sizes: Dict[str, int],
-                        dtype_bytes: int = 4) -> str | None:
+def pick_conv_partition(spec, axis_sizes: Dict,
+                        dtype_bytes: int = 4):
     """Cheapest viable partition for ``sharded_conv2d(partition='auto')``.
 
-    axis_sizes maps partition name -> the size of the mesh axis it would
-    run over.  Returns None when no mode can split the geometry over more
-    than one device (caller falls back to single-device execution).
+    axis_sizes maps a candidate — a partition name, or a composite tuple
+    from ``parallel.conv.COMPOSITE_PARTITIONS`` — to the size of the
+    mesh axis (axes tuple, for composites) it would run over.  Returns
+    the winning key, or None when no mode can split the geometry over
+    more than one device (caller falls back to single-device execution).
     Ranking: fewest fwd+bwd interconnect bytes per device; ties go to
     ``batch`` (embarrassingly parallel), then ``spatial``, then
     ``channel`` — the paper's preference order for keeping the lowered
-    buffer, not the activations, on the wire.
+    buffer, not the activations, on the wire — then to 1-D modes over
+    composites (fewer axes on the wire for the same comm bytes).
     """
-    order = ("batch", "spatial", "channel")
+    from repro.parallel.conv import COMPOSITE_PARTITIONS, PARTITIONS
+    order = ("batch", "spatial", "channel") + COMPOSITE_PARTITIONS
+    unknown = [k for k in axis_sizes
+               if k not in PARTITIONS + COMPOSITE_PARTITIONS]
+    if unknown:
+        # A misspelled or non-canonical key would otherwise be silently
+        # skipped and parallelism lost — same loud-error stance as
+        # sharded_conv2d's explicit-axis validation.
+        raise ValueError(
+            f"unknown partition candidate(s) {unknown!r}; expected keys "
+            f"from {PARTITIONS + COMPOSITE_PARTITIONS}")
     best, best_cost = None, None
     for part in order:
-        n = int(axis_sizes.get(part, 1))
-        if n <= 1 or not _viable(spec, part, n):
+        n = axis_sizes.get(part)
+        if n is None:
             continue
+        if isinstance(part, str):
+            if isinstance(n, (tuple, list)):
+                raise ValueError(f"candidate {part!r} takes one axis "
+                                 f"size, got {n!r}")
+            n = int(n)
+            if n <= 1 or not _viable(spec, part, n):
+                continue
+        else:
+            if not isinstance(n, (tuple, list)) or len(n) != len(part):
+                raise ValueError(f"candidate {part!r} takes {len(part)} "
+                                 f"axis sizes, got {n!r}")
+            n = tuple(int(v) for v in n)
+            # A composite with a 1-way sub-axis is just its other
+            # component, which is enumerated separately.
+            if min(n) <= 1 or not _viable(spec, part, n):
+                continue
         c = conv_partition_costs(spec, n, dtype_bytes)[part]
         cost = c["comm_bytes_fwd_per_device"] + c["comm_bytes_bwd_per_device"]
         if best_cost is None or cost < best_cost:

@@ -36,6 +36,7 @@ from repro.optim.adamw import AdamWConfig
 from repro.parallel import sharding
 from repro.parallel.axes import default_rules
 from repro.parallel.conv import (conv_partition_specs, default_axis,
+                                 normalize_partition, partition_name,
                                  sharded_conv2d)
 from repro.training import steps
 
@@ -44,14 +45,20 @@ RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 # Distributed-conv dry-run cells (DESIGN.md §6): one per partition mode,
 # geometry sized so the 16-way production axes divide it (specs are
 # pre-padded / VALID).  Each cell compiles a value_and_grad so the halo
-# exchange AND its transpose are exercised at mesh scale.
+# exchange AND its transpose are exercised at mesh scale.  The composite
+# batch x spatial cell shards the input on (i_n, i_h) over data x model
+# (pod x model on the 512-chip mesh) and subsumes the old batch-only
+# cell — batch is its comm-free sub-axis, so a separate 1-D batch cell
+# would only re-compile the same body and push the slow-dryrun CI
+# workflow past its budget.
 CONV_CELLS = {
-    "conv_batch": {"spec": ConvSpec(64, 112, 112, 3, 7, 7, 64, 2, 2),
-                   "partition": "batch"},
     "conv_channel": {"spec": ConvSpec(8, 56, 56, 64, 3, 3, 256, 1, 1),
                      "partition": "channel"},
     "conv_spatial": {"spec": ConvSpec(8, 224, 224, 3, 7, 7, 64, 2, 2),
                      "partition": "spatial"},
+    "conv_batch_spatial": {
+        "spec": ConvSpec(32, 224, 224, 3, 7, 7, 64, 2, 2),
+        "partition": ("batch", "spatial")},
 }
 
 
@@ -201,13 +208,19 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
 def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
                   algorithm: str = "mec"):
     """Lower + compile one sharded_conv2d train-style cell (fwd + grad)
-    on the production mesh and record memory / collective analysis."""
+    on the production mesh and record memory / collective analysis.
+    Cells with a spatial component must show their halo as
+    collective-permute bytes in the compiled HLO — asserted here so a
+    silent loss of the halo exchange fails the dry-run."""
     cell = CONV_CELLS[name]
     spec, partition = cell["spec"], cell["partition"]
+    parts = normalize_partition(partition)
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = default_rules(mesh)
     axis = default_axis(partition, mesh, rules)
-    n_axis = int(mesh.shape[axis])
+    axes = (axis,) if isinstance(axis, str) else axis
+    n_axes = tuple(int(mesh.shape[a]) for a in axes)
+    n_dev = n_axes[0] if len(parts) == 1 else n_axes
     x_spec, k_spec, _ = conv_partition_specs(partition, axis)
     x = jax.ShapeDtypeStruct((spec.i_n, spec.i_h, spec.i_w, spec.i_c),
                              jnp.float32)
@@ -217,7 +230,8 @@ def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
     def loss(xv, kv):
         out = sharded_conv2d(xv, kv, stride=(spec.s_h, spec.s_w),
                              padding="VALID", algorithm=algorithm,
-                             partition=partition, mesh=mesh, rules=rules)
+                             partition=partition, axis=axis, mesh=mesh,
+                             rules=rules)
         return jnp.sum(out * out)
 
     t0 = time.time()
@@ -233,10 +247,16 @@ def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
     mem = compiled.memory_analysis()
     cost = cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
-    analytic = conv_partition_costs(spec, n_axis)[partition]
+    analytic = conv_partition_costs(spec, n_dev)[
+        parts if len(parts) > 1 else parts[0]]
+    if "spatial" in parts:
+        assert coll.get("collective-permute", 0) > 0, (
+            f"{name}: spatial partition compiled without collective-permute "
+            f"halo traffic (collectives: {coll})")
     result = {
         "cell": name, "kind": "conv_grad", "algorithm": algorithm,
-        "partition": partition, "axis": axis, "n_axis": n_axis,
+        "partition": partition_name(partition), "axis": list(axes),
+        "n_axis": list(n_axes),
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": int(mesh.devices.size),
         "spec": dataclasses.asdict(spec),

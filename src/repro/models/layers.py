@@ -60,7 +60,8 @@ def init_conv2d(key, k_h: int, k_w: int, c_in: int, c_out: int,
 
 def conv2d_layer(p: dict, x: jnp.ndarray, *, stride=1, padding="SAME",
                  algorithm: str = "auto",
-                 partition: Optional[str] = None) -> jnp.ndarray:
+                 partition: Optional[str | Tuple[str, ...]] = None
+                 ) -> jnp.ndarray:
     """One conv block through the unified front-end (repro.core.conv_api):
     padding, geometry validation, algorithm dispatch AND mesh
     partitioning (DESIGN.md §6) all live there — models never hand-roll

@@ -151,17 +151,40 @@ def test_committed_smoke_baseline_is_valid_and_complete():
 
 
 def test_dist_suite_layers_and_smoke_cells():
-    """The dist suite covers cv1-cv12 at 2/8/256-way plus the 2-device
-    smoke cells, one per partition mode (DESIGN.md §6)."""
+    """The dist suite covers cv1-cv12 at 2/8/256-way, the composite 2-D
+    analytic cells, plus the 2-device smoke cells (one per 1-D partition
+    mode) and the 2x2 composite smoke cells (DESIGN.md §6)."""
     dist = resolve_suite("dist")
     names = {sc.name for sc in dist}
     for layer in CV_LAYERS:
         for n in (2, 8, 256):
             assert f"{layer}_d{n}" in names
+        assert f"{layer}_bs2x2" in names
     for part in ("batch", "channel", "spatial"):
         sc = next(s for s in dist if s.name == f"smoke2_{part}")
         assert sc.partition == part and sc.n_dev == 2
+    for a, b in (("batch", "spatial"), ("batch", "channel"),
+                 ("spatial", "channel")):
+        sc = next(s for s in dist if s.name == f"smoke4_{a}_{b}")
+        assert sc.partition == (a, b) and sc.n_dev == (2, 2)
     assert all(sc.partition is not None for sc in dist)
+
+
+def test_dist_composite_measure_emits_analytic_fields():
+    """A composite 2-D cell carries partition 'batch+spatial', the
+    device product in n_dev, the per-sub-axis split in n_dev_axes, and
+    halo bytes scaled by the local batch shard — without needing 4 real
+    devices."""
+    sc = next(s for s in resolve_suite("dist") if s.name == "cv9_bs2x2")
+    rec = measure(sc, "mecB", with_hlo=False, with_timing=False)
+    assert rec["partition"] == "batch+spatial"
+    assert rec["n_dev"] == 4 and rec["n_dev_axes"] == [2, 2]
+    # halo = (k_h - s_h) rows x the 4-sample local batch shard
+    assert rec["halo_bytes_per_device"] == 4 * 2 * 56 * 64 * 4
+    assert rec["per_device_overhead_elems"] > 0
+    assert rec["comm_bytes_per_device"] >= rec["halo_bytes_per_device"]
+    doc = make_report("dist", [rec], {})
+    assert validate_report(doc) == []
 
 
 def test_dist_measure_emits_analytic_fields_without_devices():
@@ -200,6 +223,11 @@ def test_dist_record_missing_sibling_field_rejected():
     del broken["halo_bytes_per_device"]
     errs = validate_report(make_report_unchecked("dist", [broken]))
     assert any("distributed cell missing" in e for e in errs)
+    # n_dev_axes postdates the first dist baselines: a record without it
+    # (a pre-composite baseline) must still validate
+    legacy = dict(rec)
+    del legacy["n_dev_axes"]
+    assert validate_report(make_report_unchecked("dist", [legacy])) == []
 
 
 def make_report_unchecked(suite, results):
@@ -214,4 +242,7 @@ def test_committed_dist_baseline_is_valid():
                       "dist.json").read_text())
     assert validate_report(doc) == []
     assert doc["suite"] == "dist"
-    assert len(doc["results"]) == 12 * 3 + 3 * 2
+    # 12 layers x {2,8,256}-way 1-D + 12 batch x spatial + 3 batch x
+    # channel + 2 spatial x channel analytic cells, and (3 smoke2 +
+    # 3 smoke4) x 2 algorithms
+    assert len(doc["results"]) == 12 * 3 + 12 + 3 + 2 + (3 + 3) * 2

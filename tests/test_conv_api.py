@@ -115,6 +115,35 @@ def test_mec_grad_matches_direct(algorithm, stride):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("algorithm", list(MEC_ALGORITHMS))
+def test_mec_precision_reaches_lowered_dots(algorithm):
+    """Regression: conv2d used to drop ``precision`` on every MEC
+    algorithm (the custom VJP was called without it).  For a bf16 input,
+    Precision.HIGHEST must change the lowered dot — and the gradient's
+    einsums must carry it too."""
+    inp = _rand((1, 8, 8, 3), 30, jnp.bfloat16)
+    ker = _rand((3, 3, 3, 4), 31, jnp.bfloat16)
+
+    def lowered(precision, grad=False):
+        def f(i, k):
+            out = conv2d(i, k, algorithm=algorithm, precision=precision,
+                         partition="none")
+            return jnp.sum(out.astype(jnp.float32) ** 2)
+        fn = jax.grad(f, argnums=(0, 1)) if grad else f
+        return jax.jit(fn).lower(inp, ker).as_text()
+
+    assert "HIGHEST" in lowered(jax.lax.Precision.HIGHEST)
+    assert "HIGHEST" not in lowered(None)
+    assert "HIGHEST" in lowered(jax.lax.Precision.HIGHEST, grad=True)
+    assert "HIGHEST" not in lowered(None, grad=True)
+    # and the result still matches the oracle
+    out = conv2d(inp, ker, algorithm=algorithm,
+                 precision=jax.lax.Precision.HIGHEST)
+    ref = _lax_ref(inp, ker, 1, "VALID")
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
 def test_mec_grad_matches_numerical():
     """Central-difference spot check of the custom VJP (both operands)."""
     inp = _rand((1, 6, 6, 2), 15)

@@ -99,8 +99,9 @@ def test_sweep_results_complete_if_present():
 @pytest.mark.slow
 def test_dryrun_conv_cells_subprocess(tmp_path):
     """Real .lower().compile() of sharded_conv2d (fwd + grad) on the
-    multi-pod 512-chip mesh: the spatial cell must show halo traffic
-    (collective-permute) and every cell must carry the analytic
+    multi-pod 512-chip mesh: cells with a spatial component (the 1-D
+    spatial cell AND the composite batch x spatial cell) must show halo
+    traffic (collective-permute) and every cell must carry the analytic
     per-device/halo fields from the partition cost model."""
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run(
@@ -108,17 +109,24 @@ def test_dryrun_conv_cells_subprocess(tmp_path):
          "--multi-pod", "--out", str(tmp_path)],
         env=env, cwd=REPO, capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, out.stderr[-3000:]
-    for name, partition in (("conv_batch", "batch"),
-                            ("conv_channel", "channel"),
-                            ("conv_spatial", "spatial")):
+    for name, partition in (("conv_channel", "channel"),
+                            ("conv_spatial", "spatial"),
+                            ("conv_batch_spatial", "batch+spatial")):
         res = json.loads((tmp_path / f"{name}__multipod.json").read_text())
         assert res["n_chips"] == 512
         assert res["partition"] == partition
         assert res["analytic"]["viable"] is True
         assert res["analytic"]["flops_per_device"] > 0
-        if partition == "spatial":
+        if "spatial" in partition:
             assert res["analytic"]["halo_bytes_per_device"] > 0
             assert res["per_device"]["collectives"].get(
                 "collective-permute", 0) > 0
         else:
             assert res["analytic"]["halo_bytes_per_device"] == 0
+    # the composite cell shards input on (i_n, i_h) over two mesh axes
+    res = json.loads(
+        (tmp_path / "conv_batch_spatial__multipod.json").read_text())
+    assert res["axis"] == ["pod", "model"]
+    assert res["n_axis"] == [2, 16]
+    assert res["analytic"]["n_dev"] == 32
+    assert res["analytic"]["n_dev_axes"] == [2, 16]

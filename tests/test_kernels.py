@@ -112,3 +112,26 @@ def test_accumulator_budget_env_and_default(monkeypatch):
         ops.accumulator_budget()
     # explicit argument still wins over everything
     assert ops.pick_w_blk(4096, 8, target_bytes=2 << 20) == 512
+
+
+def test_pick_w_blk_never_exceeds_explicit_budget():
+    """Regression: the 8-column sublane floor used to override a small
+    explicit target_bytes (pick_w_blk(1000, 4, target_bytes=64) -> an
+    8-column block = 128 accumulator bytes, 2x the budget)."""
+    from repro.kernels import ops
+    blk = ops.pick_w_blk(1000, 4, target_bytes=64)
+    assert blk * 4 * 4 <= 64, (blk, blk * 4 * 4)
+    assert blk == 4
+    # sweep: an explicit budget >= one f32 column is never exceeded
+    for k_c in (1, 3, 8, 64):
+        for budget in (4 * k_c, 64, 512, 4096, 1 << 20):
+            if budget < 4 * k_c:
+                continue          # below the 1-column minimum
+            blk = ops.pick_w_blk(10_000, k_c, target_bytes=budget)
+            assert 1 <= blk <= 512
+            assert blk * 4 * k_c <= budget, (k_c, budget, blk)
+    # sub-column budgets clamp to the 1-column minimum (smallest
+    # accumulator that exists) rather than 0
+    assert ops.pick_w_blk(16, 64, target_bytes=8) == 1
+    # the implicit device budget keeps its 8-column sublane floor
+    assert ops.pick_w_blk(1000, 1 << 20) == 8
