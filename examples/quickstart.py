@@ -36,3 +36,13 @@ print(f"\nauto dispatch on this geometry -> {pick_conv2d_algorithm(spec)!r}")
 print("lowered-matrix overhead (f32 MB):")
 for alg, f in ALL_OVERHEADS.items():
     print(f"  {alg:10s} {f(spec) * 4 / 2**20:8.2f} MB")
+
+# --- the planner (DESIGN.md §7): inspect, serialize, replay ---------------
+from repro.plan import ConvPlan, plan_conv2d  # noqa: E402
+
+plan = plan_conv2d(spec)                      # analytic policy (default)
+print("\n" + plan.explain())
+replayed = ConvPlan.from_json(plan.to_json())  # plans are values
+out = conv2d(x, k, padding="SAME", plan=replayed)
+print("replayed-plan output matches auto kwargs:",
+      bool(jnp.all(out == conv2d(x, k, padding='SAME', algorithm='auto'))))

@@ -23,9 +23,9 @@ from repro.models.layers import conv2d_layer, init_conv2d
 from repro.optim import adamw
 
 
-def conv_layer(p, x, stride=1, algorithm="mec"):
+def conv_layer(p, x, stride=1, algorithm="mec", plan=None):
     return jax.nn.relu(conv2d_layer(p, x, stride=stride, padding="SAME",
-                                    algorithm=algorithm))
+                                    algorithm=algorithm, plan=plan))
 
 
 def init_model(key, width):
@@ -39,12 +39,28 @@ def init_model(key, width):
     }
 
 
-def forward(p, imgs, algorithm="mec"):
-    x = conv_layer(p["c1"], imgs, 2, algorithm)
-    x = conv_layer(p["c2"], x, 2, algorithm)
-    x = conv_layer(p["c3"], x, 2, algorithm)
+def forward(p, imgs, algorithm="mec", plans=None):
+    plans = plans or {}
+    x = conv_layer(p["c1"], imgs, 2, algorithm, plans.get("c1"))
+    x = conv_layer(p["c2"], x, 2, algorithm, plans.get("c2"))
+    x = conv_layer(p["c3"], x, 2, algorithm, plans.get("c3"))
     x = x.mean(axis=(1, 2))
     return x @ p["head"]["w"] + p["head"]["b"]
+
+
+def resolve_plans(params, batch, size=32, mode="cached"):
+    """algorithm="auto": the ConvPlan per conv layer is resolved ONCE
+    here (DESIGN.md §7) and replayed by every training step — the plan
+    cache persists the decisions across runs."""
+    from repro.models.layers import plan_conv2d_layer
+    plans = {}
+    for name in ("c1", "c2", "c3"):
+        c_in = params[name]["w"].shape[2]
+        plans[name] = plan_conv2d_layer(params[name],
+                                        (batch, size, size, c_in),
+                                        stride=2, padding="SAME", mode=mode)
+        size //= 2
+    return plans
 
 
 def make_batch(key, batch, size=32):
@@ -73,6 +89,12 @@ def main(argv=None):
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"[train_cnn] {n_params/1e3:.1f}k params, every conv via "
           f"conv2d(algorithm={args.algorithm!r})")
+    plans = None
+    if args.algorithm == "auto":
+        plans = resolve_plans(params, args.batch)
+        for name, pl in plans.items():
+            print(f"[train_cnn] {name} plan[{pl.mode}]: {pl.algorithm} "
+                  f"(solution={pl.solution}, w_blk={pl.w_blk})")
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                                 warmup_steps=10, weight_decay=0.01)
     opt = adamw.init(params)
@@ -82,7 +104,7 @@ def main(argv=None):
         imgs, labels = make_batch(key, args.batch)
 
         def loss_fn(p):
-            logits = forward(p, imgs, args.algorithm)
+            logits = forward(p, imgs, args.algorithm, plans)
             return -jax.nn.log_softmax(logits)[
                 jnp.arange(args.batch), labels].mean(), logits
 

@@ -11,27 +11,48 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.archs import smoke_config
-from repro.core import conv2d
+from repro.core import conv2d, conv2d_spec
 from repro.models.lm import LM
+from repro.plan import plan_conv2d
 
 
-def conv_frontend(key, mel, d_model):
+def make_conv_frontend(key, mel_shape, d_model, plan_mode="cached"):
     """mel (B, T, n_mels) -> (B, T//2, d_model) via two MEC conv1d layers
     (expressed as height-1 conv2d: exactly the paper's Algorithm 2 with
     i_h = time).  Padding and dispatch live in the conv2d front-end; the
     stride-2 layer keeps the whisper-conventional symmetric (1, 1) time
     pad explicitly (SAME would pad (0, 1) for even T, shifting every
-    window by one frame)."""
-    b, t, n_mels = mel.shape
+    window by one frame).
+
+    The serving-path pattern (DESIGN.md §7): each layer's ConvPlan is
+    resolved HERE, once, at frontend construction — every request then
+    replays the frozen decision through ``conv2d(plan=)``; with
+    ``plan_mode="cached"`` the decision also persists on disk across
+    server restarts."""
+    b, t, n_mels = mel_shape
     k1, k2 = jax.random.split(key)
     w1 = jax.random.normal(k1, (3, 1, n_mels, d_model)) * n_mels ** -0.5
     w2 = jax.random.normal(k2, (3, 1, d_model, d_model)) * d_model ** -0.5
-    x = mel[:, :, None, :]                       # (B, T, 1, mels) h=time
-    x = jax.nn.gelu(conv2d(x, w1, stride=(1, 1), padding="SAME",
-                           algorithm="mec"))
-    x = jax.nn.gelu(conv2d(x, w2, stride=(2, 1), padding=((1, 1), (0, 0)),
-                           algorithm="mec"))     # stride-2 downsample
-    return x[:, :, 0, :]
+    x1 = jax.ShapeDtypeStruct((b, t, 1, n_mels), w1.dtype)
+    plan1 = plan_conv2d(conv2d_spec(x1, w1, stride=(1, 1), padding="SAME"),
+                        dtype=w1.dtype, mode=plan_mode)
+    x2 = jax.ShapeDtypeStruct((b, t, 1, d_model), w2.dtype)
+    plan2 = plan_conv2d(conv2d_spec(x2, w2, stride=(2, 1),
+                                    padding=((1, 1), (0, 0))),
+                        dtype=w2.dtype, mode=plan_mode)
+    print(f"[whisper] frontend plans: conv1={plan1.algorithm!r} "
+          f"conv2={plan2.algorithm!r} (resolved once, mode={plan_mode!r})")
+
+    def frontend(mel):
+        x = mel[:, :, None, :]                   # (B, T, 1, mels) h=time
+        x = jax.nn.gelu(conv2d(x, w1, stride=(1, 1), padding="SAME",
+                               plan=plan1))
+        x = jax.nn.gelu(conv2d(x, w2, stride=(2, 1),
+                               padding=((1, 1), (0, 0)),
+                               plan=plan2))      # stride-2 downsample
+        return x[:, :, 0, :]
+
+    return frontend
 
 
 def main():
@@ -39,7 +60,8 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.key(0))
     mel = jax.random.normal(jax.random.key(1), (2, 2 * cfg.encoder_len, 80))
-    frames = conv_frontend(jax.random.key(2), mel, cfg.d_model)
+    frontend = make_conv_frontend(jax.random.key(2), mel.shape, cfg.d_model)
+    frames = frontend(mel)
     print("[whisper] mel", mel.shape, "-> frames", frames.shape)
     assert frames.shape == (2, cfg.encoder_len, cfg.d_model)
     enc = model.encode(params, frames)

@@ -1,18 +1,27 @@
 """CLI entry point:  PYTHONPATH=src python -m repro.bench --suite smoke \\
-    --out BENCH_smoke.json [--format csv] [--crosscheck]"""
+    --out BENCH_smoke.json [--format csv] [--crosscheck]
+
+``--suite autotune`` is special: it runs the analytic-vs-measured pick
+comparison (``harness.run_autotune``, DESIGN.md §7) over the scenarios
+of ``--base-suite`` and writes its own document (BENCH_autotune.json)
+rather than a standard suite report."""
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
-from repro.bench.harness import run_suite
+from repro.bench.harness import run_autotune, run_suite
 from repro.bench.report import render_csv, write_report
 from repro.bench.scenarios import SUITES
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.bench", description=__doc__)
-    ap.add_argument("--suite", required=True, choices=sorted(SUITES))
+    ap.add_argument("--suite", required=True,
+                    choices=sorted(SUITES) + ["autotune"])
+    ap.add_argument("--base-suite", default="smoke", choices=sorted(SUITES),
+                    help="scenarios the autotune comparison runs over")
     ap.add_argument("--out", default=None,
                     help="write BENCH_<suite>.json here (default: "
                          "BENCH_<suite>.json in the cwd for json format)")
@@ -34,6 +43,20 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+    if args.suite == "autotune":
+        doc = run_autotune(args.base_suite, iters=args.iters,
+                           warmup=args.warmup, interpret=interpret,
+                           progress=lambda m: print(m, file=sys.stderr))
+        out = args.out or "BENCH_autotune.json"
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        wins = sum(1 for r in doc["results"]
+                   if r["speedup"] and r["speedup"] >= 1.0)
+        print(f"[bench] autotune over {args.base_suite}: "
+              f"{len(doc['results'])} cells, measured pick <= analytic on "
+              f"{wins} -> {out}")
+        return 0
     doc = run_suite(args.suite, iters=args.iters, warmup=args.warmup,
                     interpret=interpret, with_hlo=not args.no_hlo,
                     with_timing=not args.no_timing,

@@ -70,10 +70,23 @@ def _analytic_flops(spec: ConvSpec, algorithm: str) -> float:
     return float(costs[base]["flops"])
 
 
+def _resolved_plan_dict(sc: Scenario) -> Dict:
+    """The resolved ConvPlan (repro.plan, analytic policy) for the
+    scenario's paper geometry — recorded per cell so a report shows the
+    full decision, not just the algorithm name.  Lazy import: bench sits
+    below plan in the layer order."""
+    from repro.plan import plan_conv2d
+    return plan_conv2d(sc.spec, dtype=sc.dtype, mode="analytic",
+                       partition="none").to_dict()
+
+
 def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
             interpret: Optional[bool] = None, with_hlo: bool = True,
-            with_timing: bool = True) -> Dict:
-    """One result record for a (scenario, algorithm) cell."""
+            with_timing: bool = True,
+            plan_dict: Optional[Dict] = None) -> Dict:
+    """One result record for a (scenario, algorithm) cell.  plan_dict
+    lets run_suite derive the (per-scenario, algorithm-independent)
+    resolved plan once instead of per cell."""
     kwargs = dict(ALGORITHM_VARIANTS[algorithm])
     stride = (sc.run_spec.s_h, sc.run_spec.s_w)
     dtype_bytes = jnp.zeros((), sc.dtype).dtype.itemsize
@@ -94,6 +107,8 @@ def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
         # so HLO numbers have an apples-to-apples analytic partner.
         "run_flops": _analytic_flops(sc.run_spec, algorithm),
         "auto_algorithm": pick_conv2d_algorithm(sc.spec),
+        "plan": plan_dict if plan_dict is not None
+        else _resolved_plan_dict(sc),
         "out_shape": list(sc.run_spec.out_shape),
         "us_per_call": None,
         "timing": None,
@@ -210,12 +225,14 @@ def run_suite(suite: str, iters: int = 3, warmup: int = 1,
     checks: List[Dict] = []
     for sc in scenarios:
         recs = []
+        plan_dict = _resolved_plan_dict(sc)   # algorithm-independent
         for alg in sc.algorithms:
             if progress:
                 progress(f"[bench] {suite}/{sc.name}/{alg}")
             recs.append(measure(sc, alg, iters=iters, warmup=warmup,
                                 interpret=interpret, with_hlo=with_hlo,
-                                with_timing=with_timing))
+                                with_timing=with_timing,
+                                plan_dict=plan_dict))
         results.extend(recs)
         if crosscheck:
             checks.append(crosscheck_scenario(recs))
@@ -224,3 +241,54 @@ def run_suite(suite: str, iters: int = 3, warmup: int = 1,
                "with_timing": with_timing}
     return make_report(suite, results, harness,
                        crosscheck=checks if crosscheck else None)
+
+
+def run_autotune(base_suite: str = "smoke", iters: int = 3, warmup: int = 1,
+                 interpret: Optional[bool] = None, progress=None) -> Dict:
+    """Analytic-vs-measured pick quality (the ``autotune`` scenario).
+
+    For every scenario in ``base_suite``, derive the analytic plan on
+    the *timed* geometry (``run_spec`` — both picks must be judged on
+    the shapes actually measured), run the measured policy's candidate
+    timing loop (``repro.plan.measure_candidates`` — the same loop
+    ``plan_conv2d(mode="measured")`` uses, so these numbers ARE the
+    planner's numbers), and record both picks with their steady-state
+    times.  ``speedup`` > 1 means measured autotuning beat the analytic
+    costmodel on that cell.
+    """
+    from repro.bench.report import environment_fingerprint
+    from repro.plan import measure_candidates, pick_measured, plan_conv2d
+    results: List[Dict] = []
+    for sc in resolve_suite(base_suite):
+        if progress:
+            progress(f"[bench] autotune/{sc.name}")
+        analytic = plan_conv2d(sc.run_spec, dtype=sc.dtype, mode="analytic",
+                               partition="none")
+        times = measure_candidates(sc.run_spec, sc.dtype, iters=iters,
+                                   warmup=warmup, interpret=interpret)
+        # The planner's own decision rule (noise-margin tie to analytic).
+        measured_alg = pick_measured(times, analytic.algorithm)
+        analytic_us = times.get(analytic.algorithm)
+        measured_us = times[measured_alg]
+        results.append({
+            "scenario": sc.name,
+            "dtype": sc.dtype,
+            "run_spec": dataclasses.asdict(sc.run_spec),
+            "analytic_algorithm": analytic.algorithm,
+            "analytic_us": analytic_us,
+            "measured_algorithm": measured_alg,
+            "measured_us": measured_us,
+            "candidate_us": {a: times[a] for a in sorted(times)},
+            "speedup": (None if not analytic_us
+                        else round(analytic_us / measured_us, 3)),
+            "pick_agrees": measured_alg == analytic.algorithm,
+        })
+    return {
+        "autotune_schema_version": 1,
+        "suite": "autotune",
+        "base_suite": base_suite,
+        "environment": environment_fingerprint(),
+        "harness": {"iters": iters, "warmup": warmup,
+                    "interpret": interpret},
+        "results": results,
+    }

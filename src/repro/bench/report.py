@@ -52,13 +52,17 @@ OPTIONAL_RESULT_FIELDS = {
     "per_device_overhead_elems": _NUM,
     "comm_bytes_per_device": _NUM,
     "auto_partition": (str, type(None)),
+    # The resolved ConvPlan for the cell's scenario (repro.plan,
+    # DESIGN.md §7) — informational here; the committed
+    # benchmarks/baselines/plans.json gates the decision fields.
+    "plan": dict,
 }
 
 # Fields newer than the first dist baselines: type-checked when present
 # but NOT required by the partition-present block rule, so a
 # pre-composite baseline still validates (and check.py can gate it
 # leniently as promised).
-_BLOCK_EXEMPT_FIELDS = ("n_dev_axes",)
+_BLOCK_EXEMPT_FIELDS = ("n_dev_axes", "plan")
 
 SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
 

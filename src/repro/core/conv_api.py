@@ -1,4 +1,4 @@
-"""Unified, trainable 2-D convolution front-end (DESIGN.md §1).
+"""Unified, trainable 2-D convolution front-end (DESIGN.md §1, §7).
 
 Every conv call site in this repo — models, examples, benchmarks — goes
 through ``conv2d``.  It owns padding (SAME/VALID/explicit), validates
@@ -14,8 +14,17 @@ to one of the algorithm back-ends the paper compares in §4:
 ``mec_lowered``  Pallas: L materialized in HBM (paper-faithful kernels)
 ``mec_fused``    Pallas: lowering fused into the GEMM, no L in HBM
 ``mec_fused2``   Pallas: h-blocked fused variant with halo fetch
-``auto``       analytic choice via ``repro.launch.costmodel`` (default)
+``auto``       cached :class:`repro.plan.ConvPlan` (analytic on miss)
 =============  ============================================================
+
+Since the planner redesign (DESIGN.md §7) ``conv2d`` is a thin
+*executor*: the full decision — algorithm, MEC solution, Pallas
+``w_blk``, precision, partition — lives in a frozen
+:class:`repro.plan.ConvPlan`.  ``conv2d(..., plan=)`` executes exactly
+that plan (plan fields win over kwargs); bare kwargs with
+``algorithm="auto"`` resolve through the process/disk plan cache
+(``repro.plan.resolve_cached_plan``), which computes the analytic plan
+on a miss — the same pick the pre-planner dispatch made.
 
 All MEC paths are wrapped in a single ``jax.custom_vjp`` so the compact
 lowering is trainable end-to-end:
@@ -29,18 +38,22 @@ lowering is trainable end-to-end:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple, Union
+from typing import TYPE_CHECKING, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.convspec import ConvSpec, pad_same, spec_of
+from repro.core.convspec import (ConvSpec, normalize_stride, pad_same,
+                                 spec_of)
 from repro.core.direct import direct_conv2d
 from repro.core.fft_conv import fft_conv2d
 from repro.core.im2col import im2col_conv2d
 from repro.core.mec import mec_conv2d as _mec_reference, mec_lower
 from repro.core.winograd import winograd_conv2d
+
+if TYPE_CHECKING:  # repro.plan imports core; the cycle is runtime-lazy
+    from repro.plan import ConvPlan
 
 MEC_ALGORITHMS = ("mec", "mec_lowered", "mec_fused", "mec_fused2")
 ALGORITHMS = ("auto", "direct", "im2col", "fft", "winograd") + MEC_ALGORITHMS
@@ -48,17 +61,12 @@ ALGORITHMS = ("auto", "direct", "im2col", "fft", "winograd") + MEC_ALGORITHMS
 Padding = Union[str, int, Tuple]
 
 
-def _norm_stride(stride) -> Tuple[int, int]:
-    s_h, s_w = (stride, stride) if isinstance(stride, int) else tuple(stride)
-    if min(s_h, s_w) < 1:
-        raise ValueError(f"strides must be >= 1, got {(s_h, s_w)}")
-    return s_h, s_w
-
-
 def apply_padding(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int, s_w: int,
                   padding: Padding) -> jnp.ndarray:
     """SAME / VALID / explicit padding, applied once so every algorithm
-    sees an identical pre-padded input (paper §2.1)."""
+    sees an identical pre-padded input (paper §2.1).  Negative explicit
+    pads are rejected here — ``jnp.pad`` would otherwise raise deep in
+    the trace with an opaque message."""
     if isinstance(padding, str):
         mode = padding.upper()
         if mode == "VALID":
@@ -73,7 +81,12 @@ def apply_padding(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int, s_w: int,
         p_h = (p_h, p_h)
     if isinstance(p_w, int):
         p_w = (p_w, p_w)
-    return jnp.pad(inp, ((0, 0), tuple(p_h), tuple(p_w), (0, 0)))
+    p_h, p_w = tuple(p_h), tuple(p_w)
+    if min(p_h + p_w) < 0:
+        raise ValueError(
+            f"padding must be non-negative, got {(p_h, p_w)}; negative "
+            "pads (cropping) are not a convolution padding")
+    return jnp.pad(inp, ((0, 0), p_h, p_w, (0, 0)))
 
 
 # ---------------------------------------------------------------------------
@@ -81,26 +94,28 @@ def apply_padding(inp: jnp.ndarray, k_h: int, k_w: int, s_h: int, s_w: int,
 # ---------------------------------------------------------------------------
 
 def _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret,
-                 precision):
+                 precision, w_blk):
     if variant == "mec":
         return _mec_reference(inp, kernel, (s_h, s_w), solution=solution,
                               precision=precision)
     from repro.kernels.ops import mec_conv2d_tpu
     mode = variant[len("mec_"):]          # lowered | fused | fused2
     return mec_conv2d_tpu(inp, kernel, (s_h, s_w), mode=mode,
-                          interpret=interpret, precision=precision)
+                          interpret=interpret, precision=precision,
+                          w_blk=w_blk)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
 def _mec_conv(inp, kernel, s_h, s_w, variant, solution, interpret,
-              precision):
+              precision, w_blk):
     return _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret,
-                        precision)
+                        precision, w_blk)
 
 
-def _mec_fwd(inp, kernel, s_h, s_w, variant, solution, interpret, precision):
+def _mec_fwd(inp, kernel, s_h, s_w, variant, solution, interpret, precision,
+             w_blk):
     out = _mec_forward(inp, kernel, s_h, s_w, variant, solution, interpret,
-                       precision)
+                       precision, w_blk)
     return out, (inp, kernel)
 
 
@@ -146,7 +161,8 @@ def _mec_weight_grad(inp: jnp.ndarray, g: jnp.ndarray, s_h: int, s_w: int,
     return jnp.stack(rows, axis=0)        # (k_h, k_w, i_c, k_c)
 
 
-def _mec_bwd(s_h, s_w, variant, solution, interpret, precision, res, g):
+def _mec_bwd(s_h, s_w, variant, solution, interpret, precision, w_blk,
+             res, g):
     inp, kernel = res
     d_inp = _mec_input_grad(g, kernel, s_h, s_w, inp.shape[1], inp.shape[2],
                             precision)
@@ -162,13 +178,36 @@ _mec_conv.defvjp(_mec_fwd, _mec_bwd)
 # public dispatch
 # ---------------------------------------------------------------------------
 
+def _dispatch(x: jnp.ndarray, kernel: jnp.ndarray, spec: ConvSpec,
+              s_h: int, s_w: int, algorithm: str, solution: str,
+              interpret: Optional[bool], precision,
+              w_blk: Optional[int]) -> jnp.ndarray:
+    """Single-device execution of a *resolved* algorithm on the
+    pre-padded input — the executor core shared by the kwargs path and
+    ``conv2d(plan=)``."""
+    if algorithm == "direct":
+        return direct_conv2d(x, kernel, (s_h, s_w), precision=precision)
+    if algorithm == "im2col":
+        return im2col_conv2d(x, kernel, (s_h, s_w), precision=precision)
+    if algorithm == "fft":
+        return fft_conv2d(x, kernel, (s_h, s_w), precision=precision)
+    if algorithm == "winograd":
+        if (spec.k_h, spec.k_w, s_h, s_w) != (3, 3, 1, 1):
+            raise ValueError(
+                "winograd F(2x2,3x3) requires a 3x3 kernel and stride 1; "
+                f"got kernel {(spec.k_h, spec.k_w)} stride {(s_h, s_w)}")
+        return winograd_conv2d(x, kernel, precision=precision)
+    return _mec_conv(x, kernel, s_h, s_w, algorithm, solution, interpret,
+                     precision, w_blk)
+
+
 def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
            padding: Padding = "VALID", algorithm: str = "auto",
            solution: str = "auto", interpret: Optional[bool] = None,
            precision=None,
            partition: Union[str, Tuple[str, ...], None] = None,
-           partition_axis: Union[str, Tuple[str, ...], None] = None
-           ) -> jnp.ndarray:
+           partition_axis: Union[str, Tuple[str, ...], None] = None,
+           plan: Optional["ConvPlan"] = None) -> jnp.ndarray:
     """2-D convolution, NHWC x HWIO -> NHWC.
 
     inp: (i_n, i_h, i_w, i_c); kernel: (k_h, k_w, i_c, k_c).
@@ -178,6 +217,15 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
     interpret: force Pallas interpret mode (None = auto: interpret
     everywhere but real TPU).  All MEC algorithms are differentiable via
     the shared custom VJP.
+
+    plan: a resolved :class:`repro.plan.ConvPlan` (DESIGN.md §7).  When
+    given, the plan's decision fields — algorithm, solution, precision,
+    Pallas ``w_blk``, partition + mesh axes — *win over the kwargs*;
+    only the geometry kwargs (stride, padding) remain the caller's and
+    must reproduce ``plan.spec`` exactly (mismatch raises).  Without a
+    plan, ``algorithm="auto"`` resolves through the plan cache
+    (``repro.plan.resolve_cached_plan``: process LRU -> on-disk JSON ->
+    analytic costmodel), so repeated shapes reuse one decision.
 
     partition routes through the distributed layer
     (``repro.parallel.conv.sharded_conv2d``, DESIGN.md §6):
@@ -189,12 +237,15 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
     exactly when ``parallel.axes.use_rules`` rules are installed (1-D
     and composite candidates both enumerated by the cost model), so the
     same model code runs on a laptop and a pod.  partition_axis names the
-    mesh axis explicitly (a tuple, paired positionally, for composites;
-    else per-partition defaults apply).
+    mesh axis explicitly (a tuple, paired positionally, for composites).
     """
+    if plan is not None:
+        return _execute_plan(inp, kernel, plan, stride=stride,
+                             padding=padding, interpret=interpret)
+
     if partition != "none":
         # Lazy import: parallel sits above core; call-time routing keeps
-        # core import-clean (mirrors the costmodel import below).
+        # core import-clean (mirrors the plan/costmodel imports below).
         from repro.parallel.axes import current_rules
         if partition is not None or current_rules() is not None:
             from repro.parallel.conv import sharded_conv2d
@@ -204,7 +255,7 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
                 partition=partition or "auto", axis=partition_axis,
                 interpret=interpret, precision=precision)
 
-    s_h, s_w = _norm_stride(stride)
+    s_h, s_w = normalize_stride(stride)
     k_h, k_w = kernel.shape[0], kernel.shape[1]
     x = apply_padding(inp, k_h, k_w, s_h, s_w, padding)
     spec = spec_of(x, kernel, (s_h, s_w))
@@ -213,32 +264,52 @@ def conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
     if algorithm not in ALGORITHMS:
         raise ValueError(
             f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}")
+    w_blk = None
     if algorithm == "auto":
-        # Lazy import: costmodel sits in the launch layer; importing it at
-        # call time keeps core free of an import-time upward dependency.
-        from repro.launch.costmodel import pick_conv2d_algorithm
-        algorithm = pick_conv2d_algorithm(spec)
-    if algorithm == "direct":
-        return direct_conv2d(x, kernel, (s_h, s_w), precision=precision)
-    if algorithm == "im2col":
-        return im2col_conv2d(x, kernel, (s_h, s_w), precision=precision)
-    if algorithm == "fft":
-        return fft_conv2d(x, kernel, (s_h, s_w))
-    if algorithm == "winograd":
-        if (spec.k_h, spec.k_w, s_h, s_w) != (3, 3, 1, 1):
-            raise ValueError(
-                "winograd F(2x2,3x3) requires a 3x3 kernel and stride 1; "
-                f"got kernel {(spec.k_h, spec.k_w)} stride {(s_h, s_w)}")
-        return winograd_conv2d(x, kernel)
-    return _mec_conv(x, kernel, s_h, s_w, algorithm, solution, interpret,
-                     precision)
+        # Bare kwargs resolve through the plan cache (DESIGN.md §7):
+        # process LRU -> on-disk JSON -> the analytic costmodel pick the
+        # pre-planner dispatch made.  Lazy import: plan sits above core.
+        from repro.plan import resolve_cached_plan
+        cached = resolve_cached_plan(spec, dtype=x.dtype)
+        algorithm = cached.algorithm
+        w_blk = cached.w_blk
+    return _dispatch(x, kernel, spec, s_h, s_w, algorithm, solution,
+                     interpret, precision, w_blk)
+
+
+def _execute_plan(inp: jnp.ndarray, kernel: jnp.ndarray, plan: "ConvPlan",
+                  *, stride, padding: Padding,
+                  interpret: Optional[bool]) -> jnp.ndarray:
+    """Execute exactly the decision a :class:`repro.plan.ConvPlan`
+    captured.  The caller's geometry (stride/padding/shapes) must
+    reproduce ``plan.spec``; every decision field comes from the plan."""
+    s_h, s_w = normalize_stride(stride)
+    k_h, k_w = kernel.shape[0], kernel.shape[1]
+    x = apply_padding(inp, k_h, k_w, s_h, s_w, padding)
+    spec = spec_of(x, kernel, (s_h, s_w))
+    plan.check_executable(spec, x.dtype)
+    if plan.partition is not None:
+        # The plan already holds the partition decision (components +
+        # mesh axes); the distributed layer executes it without
+        # re-enumerating candidates.  w_blk is not forwarded: the
+        # per-device body sees a *local* geometry the global block was
+        # not picked for, so it re-derives its own (DESIGN.md §7).
+        from repro.parallel.conv import sharded_conv2d
+        return sharded_conv2d(
+            x, kernel, stride=(s_h, s_w), padding="VALID",
+            algorithm=plan.algorithm, solution=plan.solution,
+            partition=plan.partition, axis=plan.partition_axes,
+            interpret=interpret, precision=plan.precision_value())
+    return _dispatch(x, kernel, spec, s_h, s_w, plan.algorithm,
+                     plan.solution, interpret, plan.precision_value(),
+                     plan.w_blk)
 
 
 def conv2d_spec(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
                 padding: Padding = "VALID") -> ConvSpec:
     """The post-padding ConvSpec ``conv2d`` would dispatch on (for cost
-    and memory accounting without running the conv)."""
-    s_h, s_w = _norm_stride(stride)
+    and memory accounting — and planning — without running the conv)."""
+    s_h, s_w = normalize_stride(stride)
     x = jax.eval_shape(
         lambda a: apply_padding(a, kernel.shape[0], kernel.shape[1],
                                 s_h, s_w, padding), inp)

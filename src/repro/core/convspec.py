@@ -46,8 +46,20 @@ class ConvSpec:
             raise ValueError(f"strides must be >= 1: {self}")
 
 
+def normalize_stride(stride) -> Tuple[int, int]:
+    """Canonical ``(s_h, s_w)`` from an int or a 2-sequence.
+
+    The one stride normalizer in the repo: ``spec_of``, the ``conv2d``
+    front-end, and the distributed layer all resolve strides here, so a
+    bad stride fails identically everywhere."""
+    s_h, s_w = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    if min(s_h, s_w) < 1:
+        raise ValueError(f"strides must be >= 1, got {(s_h, s_w)}")
+    return s_h, s_w
+
+
 def spec_of(inp: jnp.ndarray, kernel: jnp.ndarray, stride) -> ConvSpec:
-    s_h, s_w = (stride, stride) if isinstance(stride, int) else stride
+    s_h, s_w = normalize_stride(stride)
     i_n, i_h, i_w, i_c = inp.shape
     k_h, k_w, kic, k_c = kernel.shape
     if kic != i_c:

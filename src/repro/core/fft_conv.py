@@ -15,8 +15,9 @@ import jax.numpy as jnp
 from repro.core.convspec import spec_of
 
 
-@functools.partial(jax.jit, static_argnames=("stride",))
-def fft_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("stride", "precision"))
+def fft_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
+               precision=None) -> jnp.ndarray:
     spec = spec_of(inp, kernel, stride)
     i_h, i_w = spec.i_h, spec.i_w
     # Pad kernels to input size (the FFT memory-overhead, Eq. cited in §2.2).
@@ -25,7 +26,9 @@ def fft_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1) -> jnp.ndarray:
     f_inp = jnp.fft.rfft2(inp.astype(jnp.float32), axes=(1, 2))      # (n,h,wf,c)
     f_ker = jnp.fft.rfft2(k_pad.astype(jnp.float32), axes=(0, 1))    # (h,wf,c,kc)
     # Cross-correlation theorem: corr = irfft(conj(F[k]) * F[i]).
-    f_out = jnp.einsum("nhwc,hwco->nhwo", f_inp, jnp.conj(f_ker))
+    f_out = jnp.einsum("nhwc,hwco->nhwo", f_inp, jnp.conj(f_ker),
+                       precision=precision,
+                       preferred_element_type=jnp.complex64)
     full = jnp.fft.irfft2(f_out, s=(i_h, i_w), axes=(1, 2))
     valid = full[:, : i_h - spec.k_h + 1 : spec.s_h,
                  : i_w - spec.k_w + 1 : spec.s_w, :]

@@ -33,6 +33,17 @@ SOLUTION_T = 100
 SOLUTIONS = ("A", "B", "auto")
 
 
+def pick_solution(spec, threshold: int = SOLUTION_T) -> str:
+    """Algorithm 2 line 8: Solution A iff o_w <= T and |O| <= |L|.
+
+    The one copy of the rule — ``mec_conv2d(solution="auto")`` and the
+    planner (``repro.plan``) both resolve through it, so a plan's
+    recorded solution is exactly what the reference path would pick."""
+    size_o = spec.i_n * spec.o_h * spec.o_w * spec.k_c
+    size_l = spec.i_n * spec.o_w * spec.i_h * spec.k_w * spec.i_c
+    return "A" if (spec.o_w <= threshold and size_o <= size_l) else "B"
+
+
 def mec_lower(inp: jnp.ndarray, k_w: int, s_w: int) -> jnp.ndarray:
     """Compact lowering, Algorithm 2 lines 4-6.
 
@@ -91,9 +102,7 @@ def mec_conv2d(
     s_h = spec.s_h
 
     if solution == "auto":
-        size_o = i_n * o_h * o_w * k_c
-        size_l = i_n * o_w * i_h * k_w * i_c
-        solution = "A" if (o_w <= threshold and size_o <= size_l) else "B"
+        solution = pick_solution(spec, threshold)
 
     low = mec_lower(inp, k_w, spec.s_w)  # (i_n, o_w, i_h, k_w, i_c)
     kernel_mat = kernel.reshape(k_h * k_w * i_c, k_c).astype(low.dtype)

@@ -29,9 +29,14 @@ _AT = jnp.array(
      [0, 1, -1, -1]], dtype=jnp.float32)
 
 
-@jax.jit
-def winograd_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
-    """inp (n, h, w, c) pre-padded; kernel (3, 3, i_c, k_c); stride 1 VALID."""
+@functools.partial(jax.jit, static_argnames=("precision",))
+def winograd_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray,
+                    precision=None) -> jnp.ndarray:
+    """inp (n, h, w, c) pre-padded; kernel (3, 3, i_c, k_c); stride 1 VALID.
+
+    precision reaches every GEMM of the formulation: the tile/kernel
+    transforms (B^T d B, G g G^T), the channel-reduction product M, and
+    the inverse transform A^T M A."""
     spec = spec_of(inp, kernel, 1)
     if (spec.k_h, spec.k_w) != (3, 3):
         raise ValueError("Winograd F(2x2,3x3) requires a 3x3 kernel")
@@ -47,12 +52,16 @@ def winograd_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
     tiles = x[:, hidx[:, None, :, None], widx[None, :, None, :], :]
 
     # V = B^T d B  (transform each tile)
-    v = jnp.einsum("ij,nthjkc,lk->nthilc", _BT, tiles, _BT)
+    v = jnp.einsum("ij,nthjkc,lk->nthilc", _BT, tiles, _BT,
+                   precision=precision)
     # U = G g G^T  (transform each kernel) -> (4, 4, c, kc)
-    u = jnp.einsum("ij,jkco,lk->ilco", _G, kernel.astype(jnp.float32), _G)
+    u = jnp.einsum("ij,jkco,lk->ilco", _G, kernel.astype(jnp.float32), _G,
+                   precision=precision)
     # M = sum_c U . V  -> (n, t_h, t_w, 4, 4, kc)
-    m = jnp.einsum("nthilc,ilco->nthilo", v, u)
+    m = jnp.einsum("nthilc,ilco->nthilo", v, u, precision=precision,
+                   preferred_element_type=jnp.float32)
     # Y = A^T M A -> (n, t_h, t_w, 2, 2, kc)
-    y = jnp.einsum("ij,nthjko,lk->nthilo", _AT, m, _AT)
+    y = jnp.einsum("ij,nthjko,lk->nthilo", _AT, m, _AT,
+                   precision=precision)
     out = y.transpose(0, 1, 3, 2, 4, 5).reshape(spec.i_n, 2 * t_h, 2 * t_w, spec.k_c)
     return out[:, :o_h, :o_w, :].astype(inp.dtype)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -43,15 +44,28 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def accumulator_budget() -> int:
+def accumulator_budget(*, _warn_env: bool = True) -> int:
     """VMEM bytes the f32 output accumulator may fill.
 
     Resolution order: the REPRO_MEC_ACC_BYTES env override, else
     VMEM/8 for the queried device kind, else the ~2 MiB v5e heuristic —
     so non-v5e targets tune block sizes without editing source.
+
+    The env override is deprecated outside the planner: tuned block
+    sizes belong in a :class:`repro.plan.ConvPlan` (``plan.w_blk``,
+    produced by ``repro.plan.plan_conv2d`` and threaded to the kernels
+    by the ``conv2d`` executor).  Reads of the env var on the kwargs
+    fallback path emit a DeprecationWarning; behaviour is unchanged.
     """
     env = os.environ.get(ACC_BYTES_ENV)
     if env:
+        if _warn_env:
+            warnings.warn(
+                f"{ACC_BYTES_ENV} is deprecated outside the plan path: "
+                "put tuned accumulator budgets in a ConvPlan instead "
+                "(repro.plan.plan_conv2d resolves ConvPlan.w_blk once; "
+                "conv2d(plan=...) threads it to the kernels)",
+                DeprecationWarning, stacklevel=2)
         budget = int(env, 0)
         if budget <= 0:
             raise ValueError(f"{ACC_BYTES_ENV} must be positive, got {env!r}")
@@ -66,7 +80,8 @@ def accumulator_budget() -> int:
     return _DEFAULT_VMEM // _ACC_FRACTION
 
 
-def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None) -> int:
+def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None, *,
+               _warn_env: bool = True) -> int:
     """Output-column block: fill the accumulator budget (device-queried /
     env-tunable via :func:`accumulator_budget`, ~2 MiB on v5e) with the
     f32 accumulator, rounded down to a multiple of 8 (sublane) and capped
@@ -75,11 +90,14 @@ def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None) -> int:
     The 8-column sublane floor applies only to the *implicit* device
     budget; an explicit ``target_bytes`` is a hard cap — the block never
     exceeds it (down to the 1-column minimum, the smallest accumulator
-    that exists).
+    that exists).  ``_warn_env=False`` is the planner's entry
+    (``repro.plan``): the env override still applies there without the
+    deprecation warning, since a plan *is* the supported place for the
+    tuned value to land.
     """
     explicit = target_bytes is not None
     if not explicit:
-        target_bytes = accumulator_budget()
+        target_bytes = accumulator_budget(_warn_env=_warn_env)
     blk = min(512, target_bytes // max(1, 4 * k_c))
     if not explicit:
         blk = max(8, blk)
@@ -90,13 +108,16 @@ def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None) -> int:
 
 def mec_conv2d_tpu(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
                    mode: str = "fused", interpret=None,
-                   precision=None) -> jnp.ndarray:
+                   precision=None, w_blk: int | None = None) -> jnp.ndarray:
     """MEC convolution with Pallas kernels.
 
     mode='lowered' is the paper-faithful path (L materialized in HBM,
     Eq. 3 memory observable); mode='fused' is the beyond-paper fused path.
     precision reaches the in-kernel GEMMs (matters for bf16 operands on
-    the MXU; accumulation is f32 regardless).
+    the MXU; accumulation is f32 regardless).  w_blk is normally supplied
+    by the resolved :class:`repro.plan.ConvPlan`; when None (bare kwargs
+    path) it falls back to :func:`pick_w_blk` — device-queried VMEM with
+    the deprecated REPRO_MEC_ACC_BYTES env override.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -104,7 +125,10 @@ def mec_conv2d_tpu(inp: jnp.ndarray, kernel: jnp.ndarray, stride=1,
     i_n, i_h, i_w, i_c = inp.shape
     k_h, k_w, _, k_c = kernel.shape
     o_w = (i_w - k_w) // s_w + 1
-    w_blk = pick_w_blk(o_w, k_c)
+    if w_blk is None:
+        w_blk = pick_w_blk(o_w, k_c)
+    elif not 1 <= w_blk <= max(o_w, 1):
+        raise ValueError(f"w_blk must be in [1, o_w={o_w}], got {w_blk}")
     if mode == "fused":
         return mec_conv_fused_pallas(inp, kernel, (s_h, s_w), w_blk=w_blk,
                                      interpret=interpret,

@@ -60,18 +60,41 @@ def init_conv2d(key, k_h: int, k_w: int, c_in: int, c_out: int,
 
 def conv2d_layer(p: dict, x: jnp.ndarray, *, stride=1, padding="SAME",
                  algorithm: str = "auto",
-                 partition: Optional[str | Tuple[str, ...]] = None
-                 ) -> jnp.ndarray:
+                 partition: Optional[str | Tuple[str, ...]] = None,
+                 plan=None) -> jnp.ndarray:
     """One conv block through the unified front-end (repro.core.conv_api):
     padding, geometry validation, algorithm dispatch AND mesh
     partitioning (DESIGN.md §6) all live there — models never hand-roll
     them.  partition=None is rules-aware: under ``parallel.axes``
-    rules the conv shards itself; without a mesh it is single-device."""
+    rules the conv shards itself; without a mesh it is single-device.
+    plan (a resolved repro.plan.ConvPlan) wins over algorithm/partition
+    — resolve it once at layer construction with
+    :func:`plan_conv2d_layer` instead of re-deriving per step."""
     y = conv2d(x, p["w"].astype(x.dtype), stride=stride, padding=padding,
-               algorithm=algorithm, partition=partition)
+               algorithm=algorithm, partition=partition, plan=plan)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
+
+
+def plan_conv2d_layer(p: dict, x_shape: Tuple[int, ...], *, stride=1,
+                      padding="SAME", dtype=jnp.float32,
+                      mode: str = "cached", partition=None):
+    """Resolve the layer's ConvPlan ONCE, at construction (DESIGN.md §7).
+
+    x_shape/dtype describe the activations the layer will see (the
+    kernel's dtype follows the activations, exactly as
+    :func:`conv2d_layer` casts it).  Returns the frozen plan; pass it to
+    every ``conv2d_layer(..., plan=)`` step so train/serve loops never
+    re-derive — or re-measure — the decision per call.
+    """
+    import jax as _jax
+
+    from repro.core.conv_api import conv2d_spec
+    from repro.plan import plan_conv2d
+    spec = conv2d_spec(_jax.ShapeDtypeStruct(tuple(x_shape), dtype),
+                       p["w"], stride=stride, padding=padding)
+    return plan_conv2d(spec, dtype=dtype, mode=mode, partition=partition)
 
 
 def swiglu(x: jnp.ndarray, p: dict) -> jnp.ndarray:

@@ -55,9 +55,8 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
-from repro.core.conv_api import (ALGORITHMS, apply_padding, conv2d,
-                                 _norm_stride)
-from repro.core.convspec import ConvSpec, spec_of
+from repro.core.conv_api import ALGORITHMS, apply_padding, conv2d
+from repro.core.convspec import ConvSpec, normalize_stride, spec_of
 from repro.core.mec import SOLUTIONS
 from repro.parallel.axes import ShardingRules, current_rules
 
@@ -229,6 +228,35 @@ def conv_partition_specs(partition: Partition,
     return _partition_specs(dict(zip(parts, axes)))
 
 
+def enumerate_partition_candidates(
+        mesh: Mesh, rules: Optional[ShardingRules] = None,
+        axis: Union[str, Tuple[str, ...], None] = None):
+    """Every partition mode that can resolve mesh axes here:
+    ``{mode: (axes_tuple, n_dev)}`` with ``n_dev`` an int for 1-D modes
+    and a per-sub-axis tuple for composites.  Geometry viability is NOT
+    filtered here — ``pick_conv_partition`` ranks/filters on the spec.
+    Shared by ``sharded_conv2d(partition="auto")`` and the planner
+    (``repro.plan.plan_conv2d``), so a plan records exactly the
+    candidate set the executor would have enumerated."""
+    candidates = {}
+    if axis is None or isinstance(axis, str):
+        for part in PARTITIONS:
+            try:
+                axes = _resolve_axes((part,), axis, mesh, rules)
+            except ValueError:
+                continue  # no resolvable axis -> mode not a candidate
+            candidates[part] = (axes, int(mesh.shape[axes[0]]))
+    if axis is None or not isinstance(axis, str):
+        for comp in COMPOSITE_PARTITIONS:
+            try:
+                axes = _resolve_axes(comp, axis, mesh, rules)
+            except ValueError:
+                continue
+            candidates[comp] = (
+                axes, tuple(int(mesh.shape[a]) for a in axes))
+    return candidates
+
+
 def _validate_call(algorithm: str, solution: str) -> None:
     # Hoisted to the call site so a typo raises a plain ValueError here,
     # not a traced failure inside the shard_map body.
@@ -295,7 +323,7 @@ def sharded_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
             raise ValueError(f"at most 2 partition axes supported, got "
                              f"{axis!r}")
 
-    s_h, s_w = _norm_stride(stride)
+    s_h, s_w = normalize_stride(stride)
     k_h, k_w = kernel.shape[0], kernel.shape[1]
     x = apply_padding(inp, k_h, k_w, s_h, s_w, padding)
     spec = spec_of(x, kernel, (s_h, s_w))
@@ -311,22 +339,7 @@ def sharded_conv2d(inp: jnp.ndarray, kernel: jnp.ndarray, *, stride=1,
         # Lazy import mirrors conv_api's costmodel use: the launch layer
         # is consulted at call time, never at core/parallel import time.
         from repro.launch.costmodel import pick_conv_partition
-        candidates = {}
-        if axis is None or isinstance(axis, str):
-            for part in PARTITIONS:
-                try:
-                    axes = _resolve_axes((part,), axis, mesh, rules)
-                except ValueError:
-                    continue  # no resolvable axis -> mode not a candidate
-                candidates[part] = (axes, int(mesh.shape[axes[0]]))
-        if axis is None or not isinstance(axis, str):
-            for comp in COMPOSITE_PARTITIONS:
-                try:
-                    axes = _resolve_axes(comp, axis, mesh, rules)
-                except ValueError:
-                    continue
-                candidates[comp] = (
-                    axes, tuple(int(mesh.shape[a]) for a in axes))
+        candidates = enumerate_partition_candidates(mesh, rules, axis)
         picked = pick_conv_partition(
             spec, {p: n for p, (_, n) in candidates.items()},
             dtype_bytes=jnp.dtype(x.dtype).itemsize)

@@ -1,0 +1,23 @@
+"""Planner / autotune / plan cache (DESIGN.md §7).
+
+``plan_conv2d`` turns a :class:`~repro.core.convspec.ConvSpec` into a
+frozen :class:`ConvPlan` under one of three policies (analytic /
+measured / cached); ``conv2d(..., plan=)`` executes it exactly.  The
+process+disk plan cache lives in :mod:`repro.plan.cache`; the CLI
+(``python -m repro.plan``) builds and diffs plan baselines.
+"""
+from repro.plan.cache import (PlanCache, global_plan_cache, plan_cache_dir,
+                              reset_global_plan_cache)
+from repro.plan.convplan import (MEASURED_NOISE_MARGIN, PLAN_MODES,
+                                 PLAN_VERSION, ConvPlan,
+                                 eligible_candidates, measure_candidates,
+                                 pick_measured, plan_cache_key, plan_conv2d,
+                                 resolve_cached_plan, spec_key)
+
+__all__ = [
+    "ConvPlan", "plan_conv2d", "resolve_cached_plan", "measure_candidates",
+    "pick_measured", "eligible_candidates", "spec_key", "plan_cache_key",
+    "MEASURED_NOISE_MARGIN", "PLAN_MODES", "PLAN_VERSION",
+    "PlanCache", "global_plan_cache", "plan_cache_dir",
+    "reset_global_plan_cache",
+]

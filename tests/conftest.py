@@ -1,9 +1,17 @@
 import os
 import sys
+import tempfile
 
 # Tests run single-device (the dry-run owns the 512-device flag; it is
 # exercised via subprocess in test_dryrun.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Keep the plan cache (repro.plan.cache) out of the developer's real
+# ~/.cache: conv2d(algorithm="auto") resolves through it, so tests would
+# otherwise read/write persistent state.  Tests that assert disk
+# behaviour point REPRO_PLAN_CACHE_DIR at their own tmp_path.
+os.environ.setdefault("REPRO_PLAN_CACHE_DIR",
+                      tempfile.mkdtemp(prefix="repro-plan-cache-"))
 
 # The container image ships no `hypothesis`; fall back to the minimal
 # deterministic stub vendored under tests/_vendor (same API subset).

@@ -144,6 +144,62 @@ def test_mec_precision_reaches_lowered_dots(algorithm):
                                rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.parametrize("algorithm", ["fft", "winograd"])
+def test_fft_winograd_precision_reaches_lowered_dots(algorithm):
+    """Regression: conv2d silently dropped ``precision`` on the fft and
+    winograd branches (threaded everywhere else since the MEC fix).
+    Mirrors the bf16 MEC check: Precision.HIGHEST must change the
+    lowered dot — winograd's transform/product GEMMs and the FFT
+    pointwise-multiply both carry it now."""
+    inp = _rand((1, 8, 8, 3), 40, jnp.bfloat16)
+    ker = _rand((3, 3, 3, 4), 41, jnp.bfloat16)
+
+    def lowered(precision):
+        def f(i, k):
+            return conv2d(i, k, algorithm=algorithm, precision=precision,
+                          partition="none")
+        return jax.jit(f).lower(inp, ker).as_text()
+
+    assert "HIGHEST" in lowered(jax.lax.Precision.HIGHEST)
+    assert "HIGHEST" not in lowered(None)
+    # and the result still matches the oracle
+    out = conv2d(inp, ker, algorithm=algorithm,
+                 precision=jax.lax.Precision.HIGHEST)
+    ref = _lax_ref(inp, ker, 1, "VALID")
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_apply_padding_rejects_negative_pads():
+    """Satellite: a negative explicit pad used to surface as an opaque
+    jnp.pad trace error; now it is a plain ValueError at the API edge."""
+    inp = _rand((1, 8, 8, 2), 42)
+    ker = _rand((3, 3, 2, 4), 43)
+    for bad in (-1, ((-1, 0), (0, 0)), ((0, 0), (1, -2))):
+        with pytest.raises(ValueError, match="non-negative"):
+            conv2d(inp, ker, padding=bad, algorithm="direct")
+    # zero/positive pads unchanged
+    out = conv2d(inp, ker, padding=0, algorithm="direct")
+    assert out.shape == (1, 6, 6, 4)
+
+
+def test_stride_normalizer_is_shared():
+    """Satellite: conv_api and spec_of resolve strides through the one
+    convspec.normalize_stride — bad strides fail identically."""
+    from repro.core.convspec import normalize_stride
+    assert normalize_stride(2) == (2, 2)
+    assert normalize_stride((1, 3)) == (1, 3)
+    assert normalize_stride([2, 1]) == (2, 1)
+    with pytest.raises(ValueError, match="strides must be >= 1"):
+        normalize_stride(0)
+    inp = _rand((1, 8, 8, 2), 44)
+    ker = _rand((3, 3, 2, 4), 45)
+    with pytest.raises(ValueError, match="strides must be >= 1"):
+        conv2d(inp, ker, stride=0, algorithm="direct")
+    with pytest.raises(ValueError, match="strides must be >= 1"):
+        conv2d(inp, ker, stride=(1, 0), algorithm="mec")
+
+
 def test_mec_grad_matches_numerical():
     """Central-difference spot check of the custom VJP (both operands)."""
     inp = _rand((1, 6, 6, 2), 15)

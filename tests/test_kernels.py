@@ -103,15 +103,48 @@ def test_accumulator_budget_env_and_default(monkeypatch):
     assert ops.accumulator_budget() == 2 << 20
     assert ops.pick_w_blk(4096, 8) == 512          # hits the 512 cap
     monkeypatch.setenv(ops.ACC_BYTES_ENV, "4096")
-    assert ops.accumulator_budget() == 4096
-    assert ops.pick_w_blk(4096, 8) == 128          # 4096 / (4*8) = 128
+    with pytest.warns(DeprecationWarning):
+        assert ops.accumulator_budget() == 4096
+    with pytest.warns(DeprecationWarning):
+        assert ops.pick_w_blk(4096, 8) == 128      # 4096 / (4*8) = 128
     monkeypatch.setenv(ops.ACC_BYTES_ENV, "0x1000")  # hex accepted
-    assert ops.accumulator_budget() == 4096
+    with pytest.warns(DeprecationWarning):
+        assert ops.accumulator_budget() == 4096
     monkeypatch.setenv(ops.ACC_BYTES_ENV, "-1")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
         ops.accumulator_budget()
     # explicit argument still wins over everything
     assert ops.pick_w_blk(4096, 8, target_bytes=2 << 20) == 512
+
+
+def test_acc_bytes_env_deprecation_boundary(monkeypatch, recwarn):
+    """Satellite: a direct REPRO_MEC_ACC_BYTES read outside the plan
+    path warns DeprecationWarning (pointing at ConvPlan.w_blk /
+    plan_conv2d) with unchanged behaviour; the planner's read — the
+    supported migration target — stays silent."""
+    from repro.kernels import ops
+    monkeypatch.setenv(ops.ACC_BYTES_ENV, "4096")
+    with pytest.warns(DeprecationWarning, match="ConvPlan"):
+        assert ops.accumulator_budget() == 4096    # value unchanged
+    with pytest.warns(DeprecationWarning, match="plan_conv2d"):
+        assert ops.pick_w_blk(4096, 8) == 128
+    # the plan path: same resolved value, no warning
+    assert ops.pick_w_blk(4096, 8, _warn_env=False) == 128
+    from repro.core.convspec import ConvSpec
+    from repro.plan import plan_conv2d
+    spec = ConvSpec(1, 16, 16, 4, 3, 3, 8, 1, 1)
+    n_before = len(recwarn)
+    plan = plan_conv2d(spec, backend="tpu")        # Pallas pick -> w_blk
+    deprecations = [w for w in recwarn.list[n_before:]
+                    if issubclass(w.category, DeprecationWarning)]
+    assert deprecations == []
+    assert plan.w_blk == ops.pick_w_blk(spec.o_w, spec.k_c, _warn_env=False)
+    # no env: nothing warns anywhere
+    monkeypatch.delenv(ops.ACC_BYTES_ENV)
+    n_before = len(recwarn)
+    ops.accumulator_budget()
+    assert not [w for w in recwarn.list[n_before:]
+                if issubclass(w.category, DeprecationWarning)]
 
 
 def test_pick_w_blk_never_exceeds_explicit_budget():
