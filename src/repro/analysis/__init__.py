@@ -1,0 +1,29 @@
+"""repro.analysis — static verification of the repo's memory claims
+(DESIGN.md §8).  Three CI-gated suites:
+
+* :mod:`repro.analysis.memaudit` — XLA peak-temp bytes vs. the paper's
+  Eq. 2-4 analytic model, for every committed baseline plan.
+* :mod:`repro.analysis.pallas_check` — symbolic grid/BlockSpec/VMEM
+  checking of the Pallas kernel geometries, no compile needed.
+* :mod:`repro.analysis.lint` — AST invariants for bug classes this repo
+  has already shipped (dropped kwargs, stray env reads, shard_map
+  imports bypassing the compat shim).
+
+Run all three: ``python -m repro.analysis --suite all``.
+
+Layering: analysis may import ``core``/``kernels``/``bench`` freely but
+never ``repro.plan`` at module level — the planner calls *into*
+``pallas_check`` (lazily), so plans are duck-typed here.
+"""
+from repro.analysis.lint import Finding, lint_file, lint_tree
+from repro.analysis.memaudit import TOLERANCES, audit_plan, run_audit
+from repro.analysis.pallas_check import (PallasCheckError, PlanCheck,
+                                         assert_plan, check_geometry,
+                                         check_plan)
+
+__all__ = [
+    "Finding", "lint_file", "lint_tree",
+    "TOLERANCES", "audit_plan", "run_audit",
+    "PallasCheckError", "PlanCheck", "assert_plan", "check_geometry",
+    "check_plan",
+]

@@ -1,0 +1,121 @@
+"""CLI: ``python -m repro.analysis --suite memaudit|pallas|lint|all``.
+
+Exit status is non-zero on any violation — this is what the CI
+``static-analysis`` job runs on every push.  ``--update-lint-baseline``
+regenerates the grandfathered-findings file (use only to *shrink* it
+after fixing a finding, or to adopt a deliberate new suppression the
+baseline should own).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+SUITES = ("memaudit", "pallas", "lint", "all")
+
+
+def _run_memaudit(args) -> int:
+    from repro.analysis.memaudit import write_audit
+    out, failures = write_audit(plans_path=args.plans, out_path=args.out)
+    print(f"memaudit: report written to {out}")
+    if failures:
+        print(f"memaudit: {len(failures)} gate failure(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("memaudit: all gated cells within tolerance")
+    return 0
+
+
+def _run_pallas(args) -> int:
+    """Check every baseline plan as-committed, then every Pallas variant
+    of each baseline geometry with the planner-derived w_blk — the
+    committed plans are mostly reference-path, so the variants are what
+    actually exercises the kernel mirror."""
+    from repro.analysis.memaudit import DEFAULT_PLANS, load_plans
+    from repro.analysis.pallas_check import (PALLAS_ALGORITHMS,
+                                             check_geometry, check_plan)
+    root = pathlib.Path(__file__).resolve().parents[3]
+    plans = load_plans(args.plans or root / DEFAULT_PLANS)
+    bad = 0
+    pallas_cells = 0
+    for name, plan in plans.items():
+        result = check_plan(plan)
+        if not result.ok:
+            bad += 1
+            print(f"pallas: {name} (as committed): {result.render()}")
+        for alg in PALLAS_ALGORITHMS:
+            variant = check_geometry(plan.spec, alg, None, plan.dtype)
+            pallas_cells += 1
+            if not variant.ok:
+                bad += 1
+                print(f"pallas: {name} as {alg}: {variant.render()}")
+    if bad:
+        print(f"pallas: {bad} rejected geometry(ies)")
+        return 1
+    print(f"pallas: {len(plans)} plan(s) + {pallas_cells} Pallas "
+          f"variant geometries accepted")
+    return 0
+
+
+def _run_lint(args) -> int:
+    from repro.analysis.lint import (apply_baseline, lint_tree,
+                                     load_baseline, repo_root,
+                                     write_baseline)
+    root = repo_root()
+    findings = lint_tree(root)
+    baseline_path = pathlib.Path(
+        args.lint_baseline or root / "benchmarks/baselines/lint_baseline.json")
+    if args.update_lint_baseline:
+        write_baseline(findings, baseline_path)
+        print(f"lint: baseline rewritten with {len(findings)} finding(s) "
+              f"-> {baseline_path}")
+        return 0
+    baseline = load_baseline(baseline_path) if baseline_path.exists() else []
+    split = apply_baseline(findings, baseline)
+    for f in split["new"]:
+        print(f"lint: NEW {f.render()}")
+    if split["fixed"]:
+        print(f"lint: {len(split['fixed'])} baseline entry(ies) no longer "
+              f"fire — shrink the baseline with --update-lint-baseline:")
+        for key in split["fixed"]:
+            print(f"  fixed: {key}")
+    if split["new"]:
+        print(f"lint: {len(split['new'])} new finding(s) "
+              f"({len(split['grandfathered'])} grandfathered)")
+        return 1
+    print(f"lint: clean ({len(split['grandfathered'])} grandfathered)")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis suites (DESIGN.md §8)")
+    parser.add_argument("--suite", choices=SUITES, default="all")
+    parser.add_argument("--plans", default=None,
+                        help="plans baseline JSON (default: "
+                             "benchmarks/baselines/plans.json)")
+    parser.add_argument("--out", default=None,
+                        help="memaudit report path "
+                             "(default: BENCH_memaudit.json)")
+    parser.add_argument("--lint-baseline", default=None,
+                        help="lint baseline JSON (default: "
+                             "benchmarks/baselines/lint_baseline.json)")
+    parser.add_argument("--update-lint-baseline", action="store_true",
+                        help="rewrite the lint baseline from the current "
+                             "tree (shrink-only workflow)")
+    args = parser.parse_args(argv)
+    rc = 0
+    if args.suite in ("lint", "all"):
+        rc |= _run_lint(args)
+    if args.suite in ("pallas", "all"):
+        rc |= _run_pallas(args)
+    if args.suite in ("memaudit", "all"):
+        rc |= _run_memaudit(args)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,6 +64,33 @@ OPTIONAL_RESULT_FIELDS = {
 # leniently as promised).
 _BLOCK_EXEMPT_FIELDS = ("n_dev_axes", "plan")
 
+# Suite "memaudit" (repro.analysis.memaudit, DESIGN.md §8): one record
+# per audited (scenario, algorithm) cell — XLA's measured temp bytes vs.
+# the Eq. 2-4 prediction.  measured_*/ratio/slack are None when the
+# backend exposes no memory stats; verdict is "pass"/"fail"/"recorded"
+# and policy says whether the cell was tolerance-gated at all.
+MEMAUDIT_RESULT_FIELDS = {
+    "scenario": str,
+    "algorithm": str,
+    "dtype": str,
+    "spec": dict,
+    "predicted_overhead_elems": int,
+    "predicted_overhead_bytes": int,
+    "measured_temp_bytes": _OPT_NUM,
+    "measured_argument_bytes": _OPT_NUM,
+    "measured_output_bytes": _OPT_NUM,
+    "ratio": _OPT_NUM,
+    "slack_bytes": _OPT_NUM,
+    "tolerance": dict,
+    "policy": str,
+    "source": (str, type(None)),
+    "verdict": str,
+}
+
+# suite name -> required per-record fields; unknown suites use the
+# default timing schema above.
+RESULT_FIELDS_BY_SUITE = {"memaudit": MEMAUDIT_RESULT_FIELDS}
+
 SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
 
 ENV_FIELDS = ("jax", "numpy", "python", "backend", "device_count", "platform")
@@ -123,13 +150,14 @@ def validate_report(doc: Dict) -> List[str]:
     results = doc.get("results")
     if not isinstance(results, list) or not results:
         return errs + ["results must be a non-empty list"]
+    fields = RESULT_FIELDS_BY_SUITE.get(doc.get("suite"), RESULT_FIELDS)
     seen = set()
     for i, rec in enumerate(results):
         where = f"results[{i}]"
         if not isinstance(rec, dict):
             errs.append(f"{where} is not an object")
             continue
-        for field, types in RESULT_FIELDS.items():
+        for field, types in fields.items():
             if field not in rec:
                 errs.append(f"{where} missing {field!r}")
             elif not isinstance(rec[field], types) \

@@ -19,12 +19,21 @@ file covers the whole repo.
 ``cost_analysis`` papers over the ``Compiled.cost_analysis()`` return
 change: 0.4.x returns a one-element list of dicts (or an empty list on
 backends without an HLO cost model), newer jax returns the dict itself.
+
+``memory_analysis`` papers over the buffer-assignment accessor: newer
+jax exposes ``Compiled.memory_analysis()`` (a ``CompiledMemoryStats``
+with ``temp_size_in_bytes`` etc.; some versions wrap it in a list);
+builds without it fall back to parsing ``allocation N: size B`` lines
+from the buffer-assignment dump when one is reachable.  Returns ``None``
+when neither source exists, so callers (``repro.analysis.memaudit``)
+can record "unavailable" instead of crashing.
 """
 from __future__ import annotations
 
 import functools
 import inspect
-from typing import Sequence
+import re
+from typing import Optional, Sequence
 
 from jax.sharding import AbstractMesh as _AbstractMesh
 
@@ -64,6 +73,96 @@ def cost_analysis(compiled) -> dict:
     return dict(cost) if cost else {}
 
 
+# CompiledMemoryStats attribute -> the normalized key memaudit reads.
+_MEMORY_STAT_FIELDS = {
+    "temp_size_in_bytes": "temp_bytes",
+    "argument_size_in_bytes": "argument_bytes",
+    "output_size_in_bytes": "output_bytes",
+    "alias_size_in_bytes": "alias_bytes",
+    "generated_code_size_in_bytes": "generated_code_bytes",
+}
+
+# e.g. "allocation 3: 12.3KiB, size 23232, thread-local: ..." — only the
+# decimal byte size is load-bearing; classification flags follow on the
+# same line.
+_ALLOCATION_RE = re.compile(r"^\s*allocation\s+\d+:.*?\bsize\s+(\d+)\b(.*)$",
+                            re.IGNORECASE)
+
+
+def parse_allocation_lines(text: str) -> dict:
+    """Peak buffer bytes from a buffer-assignment dump's ``allocation:``
+    lines.  Classification mirrors XLA's: ``parameter`` allocations are
+    arguments, ``maybe-live-out`` are outputs, ``constant`` is code-side,
+    everything else is temporary scratch — the quantity Eqs. 2-4 bound.
+    """
+    out = {"temp_bytes": 0, "argument_bytes": 0, "output_bytes": 0,
+           "alias_bytes": 0, "generated_code_bytes": 0}
+    for line in text.splitlines():
+        m = _ALLOCATION_RE.match(line)
+        if not m:
+            continue
+        size, flags = int(m.group(1)), m.group(2)
+        if "parameter" in flags:
+            out["argument_bytes"] += size
+        elif "maybe-live-out" in flags:
+            out["output_bytes"] += size
+        elif "constant" in flags:
+            out["generated_code_bytes"] += size
+        else:
+            out["temp_bytes"] += size
+    return out
+
+
+def _buffer_assignment_text(compiled) -> Optional[str]:
+    """Best-effort buffer-assignment dump of a compiled executable."""
+    for attr in ("buffer_assignment_text", "buffer_assignment"):
+        fn = getattr(compiled, attr, None)
+        if callable(fn):
+            try:
+                text = fn()
+            except Exception:
+                continue
+            if isinstance(text, str) and "allocation" in text:
+                return text
+    try:  # runtime executable's memory-annotated HLO dump, where offered
+        text = compiled.runtime_executable().hlo_modules()[0].to_string()
+    except Exception:
+        return None
+    return text if isinstance(text, str) and "allocation" in text else None
+
+
+def memory_analysis(compiled) -> Optional[dict]:
+    """Normalized buffer-assignment byte counts of a compiled executable.
+
+    Returns ``{"temp_bytes", "argument_bytes", "output_bytes",
+    "alias_bytes", "generated_code_bytes", "source"}`` — ``temp_bytes``
+    is XLA's peak temporary-allocation total, the measured side of the
+    paper's Eq. 2-4 overhead claims.  ``None`` when this build exposes
+    neither ``Compiled.memory_analysis()`` nor a parseable
+    buffer-assignment dump.
+    """
+    stats = None
+    fn = getattr(compiled, "memory_analysis", None)
+    if callable(fn):
+        try:
+            stats = fn()
+        except Exception:
+            stats = None
+    if isinstance(stats, (list, tuple)):
+        stats = stats[0] if stats else None
+    if stats is not None and hasattr(stats, "temp_size_in_bytes"):
+        out = {key: int(getattr(stats, attr, 0))
+               for attr, key in _MEMORY_STAT_FIELDS.items()}
+        out["source"] = "memory_analysis"
+        return out
+    text = _buffer_assignment_text(compiled)
+    if text is None:
+        return None
+    out = parse_allocation_lines(text)
+    out["source"] = "buffer_assignment"
+    return out
+
+
 def abstract_mesh(axis_sizes: Sequence[int],
                   axis_names: Sequence[str]) -> _AbstractMesh:
     """AbstractMesh across the constructor-signature change."""
@@ -73,4 +172,5 @@ def abstract_mesh(axis_sizes: Sequence[int],
         return _AbstractMesh(tuple(zip(axis_names, axis_sizes)))
 
 
-__all__ = ["abstract_mesh", "cost_analysis", "shard_map"]
+__all__ = ["abstract_mesh", "cost_analysis", "memory_analysis",
+           "parse_allocation_lines", "shard_map"]

@@ -58,6 +58,43 @@ def normalize_stride(stride) -> Tuple[int, int]:
     return s_h, s_w
 
 
+def padding_amounts(i_h: int, i_w: int, k_h: int, k_w: int,
+                    s_h: int, s_w: int, padding) -> Tuple[int, int]:
+    """Total (rows, cols) ``conv_api.apply_padding`` would add — the same
+    SAME/VALID/int/explicit resolution, as pure arithmetic (no arrays),
+    so analytic models can size post-padding geometry without tracing."""
+    if isinstance(padding, str):
+        mode = padding.upper()
+        if mode == "VALID":
+            return 0, 0
+        if mode == "SAME":
+            o_h, o_w = -(-i_h // s_h), -(-i_w // s_w)
+            return (max((o_h - 1) * s_h + k_h - i_h, 0),
+                    max((o_w - 1) * s_w + k_w - i_w, 0))
+        raise ValueError(f"unknown padding {padding!r}")
+    if isinstance(padding, int):
+        padding = ((padding, padding), (padding, padding))
+    p_h, p_w = padding
+    if isinstance(p_h, int):
+        p_h = (p_h, p_h)
+    if isinstance(p_w, int):
+        p_w = (p_w, p_w)
+    if min(tuple(p_h) + tuple(p_w)) < 0:
+        raise ValueError(f"padding must be non-negative, got {(p_h, p_w)}")
+    return sum(p_h), sum(p_w)
+
+
+def padded_spec(s: ConvSpec, padding) -> ConvSpec:
+    """The post-padding ConvSpec of a pre-padding geometry + padding mode
+    — what ``conv2d`` actually dispatches (and every algorithm actually
+    allocates) on.  VALID is the identity."""
+    pad_h, pad_w = padding_amounts(s.i_h, s.i_w, s.k_h, s.k_w,
+                                   s.s_h, s.s_w, padding)
+    if pad_h == 0 and pad_w == 0:
+        return s
+    return dataclasses.replace(s, i_h=s.i_h + pad_h, i_w=s.i_w + pad_w)
+
+
 def spec_of(inp: jnp.ndarray, kernel: jnp.ndarray, stride) -> ConvSpec:
     s_h, s_w = normalize_stride(stride)
     i_n, i_h, i_w, i_c = inp.shape

@@ -4,7 +4,7 @@ beyond input/kernel/output, in elements (multiply by dtype size for bytes).
 """
 from __future__ import annotations
 
-from repro.core.convspec import ConvSpec
+from repro.core.convspec import ConvSpec, padded_spec
 
 
 def im2col_overhead(s: ConvSpec) -> int:
@@ -27,11 +27,15 @@ def mec_saving(s: ConvSpec) -> int:
     return im2col_overhead(s) - mec_overhead(s)
 
 
-def fft_overhead(s: ConvSpec) -> int:
+def fft_overhead(s: ConvSpec, padding="VALID") -> int:
     """Kernels padded to input size + input/output spectra (complex => x2).
 
     rfft halves the last freq axis (+1); counted in real elements.
+    The spectra are sized on the *post-padding* spatial dims — the input
+    ``fft_conv2d`` actually transforms — so a pre-padding spec with
+    SAME/explicit padding no longer understates the overhead.
     """
+    s = padded_spec(s, padding)
     w_f = s.i_w // 2 + 1
     ker = s.i_h * w_f * s.i_c * s.k_c * 2        # padded kernel spectra
     inp = s.i_n * s.i_h * w_f * s.i_c * 2        # input spectrum
@@ -48,8 +52,8 @@ def winograd_overhead(s: ConvSpec) -> int:
     return u + v + m
 
 
-def direct_overhead(s: ConvSpec) -> int:
-    return 0
+def direct_overhead(s: ConvSpec) -> int:  # lint-ignore: accepted-kwarg-not-forwarded
+    return 0          # no temporaries; s kept for ALL_OVERHEADS uniformity
 
 
 def conv_flops(s: ConvSpec) -> int:
@@ -75,7 +79,14 @@ _DISPATCH_BASE = {
 }
 
 
-def algorithm_overhead(s: ConvSpec, algorithm: str) -> int:
+def algorithm_overhead(s: ConvSpec, algorithm: str,
+                       padding="VALID") -> int:
     """Overhead in elements for any ``conv2d`` dispatch name (including
-    solution/Pallas variants not listed in :data:`ALL_OVERHEADS`)."""
-    return ALL_OVERHEADS[_DISPATCH_BASE.get(algorithm, algorithm)](s)
+    solution/Pallas variants not listed in :data:`ALL_OVERHEADS`).
+
+    ``padding`` resolves a *pre-padding* spec to the geometry the
+    algorithm actually allocates on (``convspec.padded_spec``); the
+    default VALID keeps post-padding specs — the repo norm — unchanged.
+    """
+    return ALL_OVERHEADS[_DISPATCH_BASE.get(algorithm, algorithm)](
+        padded_spec(s, padding))

@@ -44,6 +44,22 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def vmem_bytes() -> int:
+    """Per-core VMEM of the queried device kind (v5e figure when the
+    kind is unknown or the query fails — CPU/GPU interpret runs).  The
+    static checker (``repro.analysis.pallas_check``) sizes whole-kernel
+    working sets against this; :func:`accumulator_budget` carves the
+    accumulator's fraction out of it."""
+    try:
+        kind = jax.devices()[0].device_kind.lower()
+    except Exception:
+        return _DEFAULT_VMEM
+    for tag, vmem in _VMEM_BYTES_BY_KIND:
+        if tag in kind:
+            return vmem
+    return _DEFAULT_VMEM
+
+
 def accumulator_budget(*, _warn_env: bool = True) -> int:
     """VMEM bytes the f32 output accumulator may fill.
 
@@ -57,7 +73,7 @@ def accumulator_budget(*, _warn_env: bool = True) -> int:
     by the ``conv2d`` executor).  Reads of the env var on the kwargs
     fallback path emit a DeprecationWarning; behaviour is unchanged.
     """
-    env = os.environ.get(ACC_BYTES_ENV)
+    env = os.environ.get(ACC_BYTES_ENV)  # lint-ignore: deprecated-acc-bytes-env
     if env:
         if _warn_env:
             warnings.warn(
@@ -70,14 +86,7 @@ def accumulator_budget(*, _warn_env: bool = True) -> int:
         if budget <= 0:
             raise ValueError(f"{ACC_BYTES_ENV} must be positive, got {env!r}")
         return budget
-    try:
-        kind = jax.devices()[0].device_kind.lower()
-    except Exception:
-        return _DEFAULT_VMEM // _ACC_FRACTION
-    for tag, vmem in _VMEM_BYTES_BY_KIND:
-        if tag in kind:
-            return vmem // _ACC_FRACTION
-    return _DEFAULT_VMEM // _ACC_FRACTION
+    return vmem_bytes() // _ACC_FRACTION
 
 
 def pick_w_blk(o_w: int, k_c: int, target_bytes: int | None = None, *,

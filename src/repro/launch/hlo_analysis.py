@@ -15,10 +15,18 @@ PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link
 
+# Every storage type the current jax/XLA matrix can print in an HLO
+# shape.  Sub-byte types (s2/u2/s4/u4/f4) are conservatively counted at
+# their packed-in-one-byte size.  An UNKNOWN type raises — a silent
+# 4-byte default would let the memory/collective auditors under- or
+# over-count new dtypes invisibly (repro.analysis, ISSUE 6).
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "c128": 16, "s4": 1, "u4": 1, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 1, "token": 0,
 }
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -36,11 +44,17 @@ _GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        raise ValueError(
+            f"unknown HLO dtype {dtype!r}: add its byte size to "
+            "repro.launch.hlo_analysis._DTYPE_BYTES (refusing the old "
+            "silent 4-byte default — it would mis-count collective and "
+            "memory-audit bytes invisibly)")
     n = 1
     if dims:
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    return n * _DTYPE_BYTES[dtype]
 
 
 def _group_size(line: str) -> int:

@@ -419,6 +419,18 @@ def measure_candidates(spec: ConvSpec, dtype: str = "float32",
             solution=pick_solution(spec) if alg == "mec" else "auto",
             w_blk=_pallas_w_blk(spec, alg), precision=precision_name,
             backend=jax.default_backend())
+        if alg in _PALLAS_ALGOS:
+            # Static geometry gate (repro.analysis.pallas_check): a
+            # candidate the checker rejects would fault or overrun VMEM
+            # on a real TPU — never time it, never let it win.
+            from repro.analysis.pallas_check import check_plan
+            verdict = check_plan(trial)
+            if not verdict.ok:
+                import warnings
+                warnings.warn(
+                    f"measured planning skips {alg}: "
+                    + verdict.render().replace("\n", "; "))
+                continue
         fn = jax.jit(lambda i, k, _p=trial: conv2d(
             i, k, stride=(spec.s_h, spec.s_w), plan=_p,
             interpret=interpret))
@@ -494,12 +506,18 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
         algorithm = pick_measured(times, analytic)
 
     solution = pick_solution(spec) if algorithm == "mec" else "auto"
-    return ConvPlan(spec=spec, dtype=dtype, algorithm=algorithm,
+    plan = ConvPlan(spec=spec, dtype=dtype, algorithm=algorithm,
                     solution=solution,
                     w_blk=_pallas_w_blk(spec, algorithm),
                     precision=precision_name,
                     partition=parts, partition_axes=axes,
                     backend=backend, mode=mode)
+    if plan.algorithm in _PALLAS_ALGOS:
+        # Never return (or let the cached policy store) a Pallas plan the
+        # static checker rejects — raising here beats faulting at execute.
+        from repro.analysis.pallas_check import assert_plan
+        assert_plan(plan)
+    return plan
 
 
 def resolve_cached_plan(spec: ConvSpec, dtype="float32",

@@ -130,3 +130,40 @@ def test_mec_flops_identical_to_im2col():
     s = ConvSpec(2, 12, 12, 3, 3, 3, 8, 1, 1)
     # paper §3.2: "total number of mult/add operations remains identical"
     assert conv_flops(s) == 2 * 2 * 10 * 10 * 3 * 3 * 3 * 8
+
+
+@hypothesis.given(conv_geoms)
+@hypothesis.settings(max_examples=80, deadline=None)
+def test_memory_model_eq4_identity(geom):
+    """Eq. 4 three ways (repro.analysis rests on this identity): the
+    saving IS the Eq. 2 - Eq. 3 difference, and both equal the paper's
+    closed form i_n*i_c*o_w*k_w*(o_h*k_h - i_h) -- element-exact, no
+    float arithmetic anywhere in the model."""
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    s = ConvSpec(n, ih, iw, ic, kh, kw, kc, sh, sw)
+    assert mec_saving(s) == im2col_overhead(s) - mec_overhead(s)
+    assert mec_saving(s) == n * ic * s.o_w * kw * (s.o_h * kh - ih)
+
+
+@hypothesis.given(conv_geoms)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_overhead_padding_resolution(geom):
+    """algorithm_overhead(padding=...) must size the post-padding
+    geometry -- identical to calling the model on padded_spec directly,
+    and identical to the VALID value when no padding is added."""
+    from repro.core.convspec import padded_spec
+    from repro.core.memory import algorithm_overhead, fft_overhead
+    n, ih, iw, ic, kh, kw, kc, sh, sw = geom
+    s = ConvSpec(n, ih, iw, ic, kh, kw, kc, sh, sw)
+    ps = padded_spec(s, "SAME")
+    assert ps.i_h >= s.i_h and ps.i_w >= s.i_w
+    for alg in ("im2col", "mec", "fft", "winograd", "direct"):
+        assert algorithm_overhead(s, alg, padding="SAME") == \
+            algorithm_overhead(ps, alg)
+        assert algorithm_overhead(s, alg, padding="VALID") == \
+            algorithm_overhead(s, alg)
+    # the satellite fix: fft spectra are sized on PADDED spatial dims
+    # (>= not >: a 1-col pad can vanish in the rfft half-spectrum)
+    assert fft_overhead(s, padding="SAME") == fft_overhead(ps)
+    if (ps.i_h, ps.i_w) != (s.i_h, s.i_w):
+        assert fft_overhead(s, padding="SAME") >= fft_overhead(s)
