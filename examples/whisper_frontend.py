@@ -3,6 +3,15 @@ frontend in the dry-run (`input_specs()` supplies frame embeddings), but
 the actual two-conv-layer mel frontend is implemented here with MEC
 convolution and fed into the repro whisper encoder.
 
+Two constructions of the same frontend:
+
+* ``make_conv_frontend`` — the fixed-shape pattern: plans resolved once
+  at construction for ONE mel shape (DESIGN.md §7).
+* ``repro.serving.whisper_frontend_service`` — the serving pattern
+  (DESIGN.md §9): plans warmed per padded shape *class*, so
+  variable-length mels bucket into a bounded set of executables instead
+  of recompiling per length.
+
     PYTHONPATH=src python examples/whisper_frontend.py
 """
 import numpy as np
@@ -71,6 +80,27 @@ def main():
         "frames": frames,
         "tokens": jnp.zeros((2, 16), jnp.int32)})
     print("[whisper] decoder hidden", h.shape)
+
+    # The serving construction: the same two layers as warm ConvServices
+    # over (batch, T, 1) time classes.  A shorter clip pads into its
+    # class, runs the frozen warmed plan, and slices back — outputs for
+    # the full-length mel are bitwise those of the fixed-shape path's
+    # conv (same kernels would be needed for a literal diff; here we
+    # check shape discipline on a ragged batch of lengths).
+    from repro.serving import fit_prefix, whisper_frontend_service
+    t_full = 2 * cfg.encoder_len
+    svc_frontend, services = whisper_frontend_service(
+        jax.random.key(2), 80, cfg.d_model,
+        classes=[(2, t_full // 2, 1), (2, t_full, 1)])
+    for svc in services:
+        print("[whisper]", svc.warmup.summary())
+    for t in (t_full // 2 - 3, t_full // 2, t_full - 5, t_full):
+        clip = jax.random.normal(jax.random.key(3), (2, t, 80))
+        cls = services[0].bucket((2, t, 1))
+        out = fit_prefix(svc_frontend(clip), cfg.encoder_len)
+        print(f"[whisper] clip T={t:3d} -> class {cls.tag()} -> "
+              f"frames {out.shape}")
+        assert out.shape == (2, cfg.encoder_len, cfg.d_model)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ CLI::
   PYTHONPATH=src python -m repro.bench.check BENCH_smoke.json \\
       --baseline benchmarks/baselines/smoke.json --schema-only-on-timing
 """
-from repro.bench.harness import run_autotune, run_suite
+from repro.bench.harness import run_autotune, run_serve, run_suite
 from repro.bench.report import render_csv, validate_report, write_report
 from repro.bench.scenarios import (ALGORITHM_VARIANTS, CV_LAYERS,
                                    RESNET101_WEIGHTS, SUITES, Scenario,
@@ -32,6 +32,6 @@ from repro.bench.scenarios import (ALGORITHM_VARIANTS, CV_LAYERS,
 
 __all__ = [
     "ALGORITHM_VARIANTS", "CV_LAYERS", "RESNET101_WEIGHTS", "SUITES",
-    "Scenario", "render_csv", "resolve_suite", "run_autotune", "run_suite",
-    "validate_report", "write_report",
+    "Scenario", "render_csv", "resolve_suite", "run_autotune", "run_serve",
+    "run_suite", "validate_report", "write_report",
 ]

@@ -4,14 +4,20 @@
 ``--suite autotune`` is special: it runs the analytic-vs-measured pick
 comparison (``harness.run_autotune``, DESIGN.md §7) over the scenarios
 of ``--base-suite`` and writes its own document (BENCH_autotune.json)
-rather than a standard suite report."""
+rather than a standard suite report.
+
+``--suite serve`` runs the conv-serving cells (``harness.run_serve``,
+DESIGN.md §9): warm-plan vs cold-plan vs per-call ``algorithm="auto"``
+over the registered shape-class services, emitted as a standard report
+so ``repro.bench.check`` gates it against
+``benchmarks/baselines/serve.json``."""
 from __future__ import annotations
 
 import argparse
 import json
 import sys
 
-from repro.bench.harness import run_autotune, run_suite
+from repro.bench.harness import run_autotune, run_serve, run_suite
 from repro.bench.report import render_csv, write_report
 from repro.bench.scenarios import SUITES
 
@@ -19,7 +25,7 @@ from repro.bench.scenarios import SUITES
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.bench", description=__doc__)
     ap.add_argument("--suite", required=True,
-                    choices=sorted(SUITES) + ["autotune"])
+                    choices=sorted(SUITES) + ["autotune", "serve"])
     ap.add_argument("--base-suite", default="smoke", choices=sorted(SUITES),
                     help="scenarios the autotune comparison runs over")
     ap.add_argument("--out", default=None,
@@ -56,6 +62,21 @@ def main(argv=None) -> int:
         print(f"[bench] autotune over {args.base_suite}: "
               f"{len(doc['results'])} cells, measured pick <= analytic on "
               f"{wins} -> {out}")
+        return 0
+    if args.suite == "serve":
+        doc = run_serve(progress=lambda m: print(m, file=sys.stderr))
+        out = args.out or "BENCH_serve.json"
+        write_report(doc, out)
+        by_key = {(r["scenario"], r["serve_mode"]): r
+                  for r in doc["results"]}
+        cells = sorted({r["scenario"] for r in doc["results"]})
+        warm_wins = sum(
+            1 for c in cells
+            if (by_key[(c, "warm")]["p50_us"] or 0)
+            <= (by_key[(c, "auto")]["p50_us"] or 0))
+        print(f"[bench] serve: {len(doc['results'])} records over "
+              f"{len(cells)} class cells; warm p50 <= per-call auto p50 "
+              f"on {warm_wins}/{len(cells)} -> {out}")
         return 0
     doc = run_suite(args.suite, iters=args.iters, warmup=args.warmup,
                     interpret=interpret, with_hlo=not args.no_hlo,

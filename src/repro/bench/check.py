@@ -41,10 +41,16 @@ EXACT_FIELDS = ("dtype", "spec", "run_spec", "out_shape", "overhead_elems",
 # Distributed-cell analytics (suite ``dist``): exact, but only gated when
 # the baseline record carries them (schema_version 1 baselines predate
 # these fields; ``n_dev_axes`` additionally predates composite 2-D cells).
+# The serve-suite structural fields (DESIGN.md §9) gate the same way:
+# the class set and request-stream bucketing are deterministic, so a
+# drifted shape_class / request count is a behaviour change, while the
+# serve latency fields (p50_us etc.) stay under the timing policy.
 OPTIONAL_EXACT_FIELDS = ("partition", "n_dev", "n_dev_axes",
                          "halo_bytes_per_device",
                          "per_device_overhead_elems",
-                         "comm_bytes_per_device", "auto_partition")
+                         "comm_bytes_per_device", "auto_partition",
+                         "serve_mode", "shape_class", "n_classes",
+                         "n_requests")
 
 
 def _load(path) -> Dict:

@@ -243,6 +243,133 @@ def run_suite(suite: str, iters: int = 3, warmup: int = 1,
                        crosscheck=checks if crosscheck else None)
 
 
+SERVE_MODES = ("warm", "cold", "auto")
+
+
+def _serve_requests(cell, kernel_dtype):
+    """The cell's deterministic request stream, arrays prebuilt (array
+    construction must not pollute the latency measurement)."""
+    i_c = cell.kernel_shape[2]
+    reqs = []
+    for i in range(cell.n_requests):
+        n, h, w = cell.requests[i % len(cell.requests)]
+        rng = np.random.RandomState(1000 + i)
+        x = jnp.asarray(rng.randn(n, h, w, i_c).astype(np.float32),
+                        kernel_dtype)
+        reqs.append(x)
+    jax.block_until_ready(reqs)
+    return reqs
+
+
+def run_serve(progress=None) -> Dict:
+    """The ``serve`` suite (DESIGN.md §9): every registered
+    :class:`~repro.bench.scenarios.ServeScenario` served under the three
+    policies in :data:`SERVE_MODES`, one record per (shape class, mode).
+
+    Latencies are end-to-end request wall-clock *including* each mode's
+    real setup profile — warm pays plan resolution + AOT compile before
+    the stream starts, cold pays it inside the first request of each
+    class (visible as ``first_request_us``/p99), and auto pays eager
+    per-call dispatch on every request.  ``us_per_call`` is the p50, so
+    the generic timing tolerance of ``repro.bench.check`` applies; the
+    analytic fields are the paper's Eq. 3 MEC overhead on the padded
+    class spec (backend-independent, gated exactly).
+    """
+    from repro.bench.report import make_report
+    from repro.bench.scenarios import serve_cells
+    from repro.plan import plan_conv2d
+    from repro.serving.conv_service import ConvService
+    results: List[Dict] = []
+    for cell in serve_cells():
+        rng = np.random.RandomState(7)
+        k_h, k_w, i_c, k_c = cell.kernel_shape
+        kernel = jnp.asarray(rng.randn(k_h, k_w, i_c, k_c)
+                             .astype(np.float32), cell.dtype)
+        reqs = _serve_requests(cell, cell.dtype)
+        for mode in SERVE_MODES:
+            if progress:
+                progress(f"[bench] serve/{cell.name}/{mode}")
+            svc = ConvService(kernel, stride=cell.stride,
+                              padding=cell.padding, classes=cell.classes,
+                              plan_mode="cached")
+            warmed = svc.warm() if mode == "warm" else None
+            per_class: Dict = {cls: [] for cls in svc.classes}
+            t_all = time.perf_counter()
+            for x in reqs:
+                cls = svc.bucket(x.shape)
+                t0 = time.perf_counter()
+                if mode == "auto":
+                    # The pre-planner serving baseline: every request
+                    # re-enters conv2d's dispatch eagerly (same padding
+                    # work, no frozen plan, no AOT executable).
+                    out = conv2d(svc.pad_to_class(x, cls), kernel,
+                                 stride=cell.stride, padding=cell.padding,
+                                 algorithm="auto")
+                    o_n, o_h, o_w, _ = svc.request_out_shape(x.shape)
+                    out = out[:o_n, :o_h, :o_w, :]
+                else:
+                    out = svc.execute(x)
+                jax.block_until_ready(out)
+                per_class[cls].append((time.perf_counter() - t0) * 1e6)
+            total_s = max(time.perf_counter() - t_all, 1e-9)
+            throughput = len(reqs) / total_s
+            for cls in svc.classes:
+                spec = svc.class_spec(cls)
+                lat = per_class[cls]
+                record = {
+                    "scenario": f"{cell.name}_c{cls.tag()}",
+                    "algorithm": mode,
+                    "dtype": cell.dtype,
+                    "weight": 1,
+                    "spec": dataclasses.asdict(spec),
+                    "run_spec": dataclasses.asdict(spec),
+                    # Eq. 3 on the padded class spec: the memory the
+                    # serving layer's MEC lowering costs per class
+                    # request — backend-independent, exact-gated.
+                    "overhead_elems": int(algorithm_overhead(spec, "mec")),
+                    "overhead_bytes": int(
+                        algorithm_overhead(spec, "mec")
+                        * jnp.dtype(cell.dtype).itemsize),
+                    "flops": _analytic_flops(spec, "mec"),
+                    "run_flops": _analytic_flops(spec, "mec"),
+                    "auto_algorithm": pick_conv2d_algorithm(spec),
+                    "plan": plan_conv2d(spec, dtype=cell.dtype,
+                                        mode="analytic",
+                                        partition="none").to_dict(),
+                    "out_shape": list(spec.out_shape),
+                    "us_per_call": (float(np.percentile(lat, 50))
+                                    if lat else None),
+                    "timing": ({"n": len(lat),
+                                "us_p50": float(np.percentile(lat, 50)),
+                                "us_p99": float(np.percentile(lat, 99)),
+                                "us_mean": float(np.mean(lat)),
+                                "us_min": float(min(lat)),
+                                "us_max": float(max(lat))}
+                               if lat else None),
+                    "hlo_flops": None,
+                    "hlo_bytes": None,
+                    "serve_mode": mode,
+                    "shape_class": cls.tag(),
+                    "n_classes": len(svc.classes),
+                    "n_requests": len(lat),
+                    "p50_us": (float(np.percentile(lat, 50))
+                               if lat else None),
+                    "p99_us": (float(np.percentile(lat, 99))
+                               if lat else None),
+                    "first_request_us": float(lat[0]) if lat else None,
+                    "throughput_rps": float(throughput),
+                    "warmup_warnings": (warmed.warning_count
+                                        if warmed else 0),
+                    "plan_cache_io_errors": (warmed.plan_cache_io_errors
+                                             if warmed else 0),
+                }
+                results.append(record)
+    harness = {"modes": list(SERVE_MODES),
+               "latency": "end-to-end request wall-clock incl. each "
+                          "mode's setup profile"}
+    return make_report("serve", results, harness)
+
+
 def run_autotune(base_suite: str = "smoke", iters: int = 3, warmup: int = 1,
                  interpret: Optional[bool] = None, progress=None) -> Dict:
     """Analytic-vs-measured pick quality (the ``autotune`` scenario).

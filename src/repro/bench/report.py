@@ -56,13 +56,32 @@ OPTIONAL_RESULT_FIELDS = {
     # DESIGN.md §7) — informational here; the committed
     # benchmarks/baselines/plans.json gates the decision fields.
     "plan": dict,
+    # Serve-suite fields (repro.serving.conv_service, DESIGN.md §9):
+    # one record per (shape class, serving mode).  The structural
+    # fields (serve_mode, shape_class, n_classes, n_requests) are
+    # deterministic and exact-gated by check.py; the latency/throughput
+    # fields follow the timing policy (schema-only on CI).
+    "serve_mode": str,
+    "shape_class": str,
+    "n_classes": int,
+    "n_requests": int,
+    "p50_us": _OPT_NUM,
+    "p99_us": _OPT_NUM,
+    "first_request_us": _OPT_NUM,
+    "throughput_rps": _OPT_NUM,
+    "warmup_warnings": int,
+    "plan_cache_io_errors": int,
 }
 
 # Fields newer than the first dist baselines: type-checked when present
 # but NOT required by the partition-present block rule, so a
 # pre-composite baseline still validates (and check.py can gate it
-# leniently as promised).
-_BLOCK_EXEMPT_FIELDS = ("n_dev_axes", "plan")
+# leniently as promised).  The serve-suite fields are likewise outside
+# the partition block (they form their own serve_mode-keyed block).
+_BLOCK_EXEMPT_FIELDS = ("n_dev_axes", "plan", "serve_mode", "shape_class",
+                        "n_classes", "n_requests", "p50_us", "p99_us",
+                        "first_request_us", "throughput_rps",
+                        "warmup_warnings", "plan_cache_io_errors")
 
 # Suite "memaudit" (repro.analysis.memaudit, DESIGN.md §8): one record
 # per audited (scenario, algorithm) cell — XLA's measured temp bytes vs.
@@ -174,6 +193,13 @@ def validate_report(doc: Dict) -> List[str]:
                        if f not in rec and f not in _BLOCK_EXEMPT_FIELDS]
             if missing:
                 errs.append(f"{where}: distributed cell missing {missing}")
+        if "serve_mode" in rec:
+            missing = [f for f in ("shape_class", "n_classes", "n_requests",
+                                   "warmup_warnings",
+                                   "plan_cache_io_errors")
+                       if f not in rec]
+            if missing:
+                errs.append(f"{where}: serve cell missing {missing}")
         for sf in ("spec", "run_spec"):
             spec = rec.get(sf)
             if isinstance(spec, dict):

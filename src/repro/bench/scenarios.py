@@ -246,6 +246,56 @@ def _dist() -> Tuple[Scenario, ...]:
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# serve suite (repro.serving.conv_service, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeScenario:
+    """One conv-serving cell: a fixed kernel geometry, a bounded set of
+    padded shape classes, and a deterministic mixed-shape request stream
+    cycled ``n_requests`` times.  ``harness.run_serve`` serves the same
+    stream under three policies — ``warm`` (plans resolved + executors
+    AOT-compiled at startup), ``cold`` (lazy per-class resolution on
+    first hit), and ``auto`` (per-call eager ``algorithm="auto"``
+    dispatch, the pre-planner serving baseline) — and emits one record
+    per (shape class, policy)."""
+
+    name: str
+    kernel_shape: Tuple[int, int, int, int]     # (k_h, k_w, i_c, k_c)
+    stride: Tuple[int, int]
+    padding: Union[str, Tuple]                  # size-independent only
+    classes: Tuple[Tuple[int, int, int], ...]   # (n, h, w) padded classes
+    requests: Tuple[Tuple[int, int, int], ...]  # request shapes, cycled
+    n_requests: int = 24
+    dtype: str = "float32"
+
+
+def serve_cells() -> Tuple[ServeScenario, ...]:
+    # Three smoke-sized services, each exercising a distinct frontend
+    # shape: a whisper-style conv1d (h = time), a ViT patch embed, and a
+    # general strided 2-D conv with batch diversity.  Sized so all three
+    # policies x the full stream stay well inside the serve-smoke CI
+    # budget on one CPU core.
+    return (
+        ServeScenario(
+            name="mel1d", kernel_shape=(3, 1, 8, 16), stride=(1, 1),
+            padding=((1, 1), (0, 0)),
+            classes=((1, 16, 1), (1, 32, 1)),
+            requests=((1, 10, 1), (1, 16, 1), (1, 23, 1), (1, 32, 1))),
+        ServeScenario(
+            name="patch4", kernel_shape=(4, 4, 3, 8), stride=(4, 4),
+            padding="VALID",
+            classes=((1, 16, 16), (1, 32, 32)),
+            requests=((1, 12, 12), (1, 16, 16), (1, 24, 20), (1, 32, 32))),
+        ServeScenario(
+            name="s3x3", kernel_shape=(3, 3, 4, 8), stride=(2, 2),
+            padding=1,
+            classes=((1, 12, 12), (2, 16, 16)),
+            requests=((1, 9, 11), (1, 12, 12), (2, 13, 16), (2, 16, 16))),
+    )
+
+
 SUITES: Dict[str, Callable[[], Tuple[Scenario, ...]]] = {
     "table2": _table2,
     "resnet101": _resnet101,

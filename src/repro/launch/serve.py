@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+``--warm-plans`` resolves ConvPlans for the ``--shape-classes`` buckets
+at startup (repro.serving.conv_service, DESIGN.md §9) and routes the
+vlm/audio conv frontend through the warmed services, printing the
+per-class resolved-plan table before the first request.
 """
 from __future__ import annotations
 
@@ -18,6 +23,26 @@ from repro.models.lm import LM
 from repro.parallel.axes import default_rules, use_rules
 
 
+def _warm_frontend(cfg, classes):
+    """(frontend, services) for the family's conv encoder, warmed over
+    ``classes``; (None, []) when the family has no conv frontend."""
+    from repro.serving.conv_service import (patch_embed_service,
+                                            whisper_frontend_service)
+    key = jax.random.key(2)
+    if cfg.family == "vlm":
+        # ViT-style patch embed: classes are (batch, H, W) image buckets.
+        frontend, svc = patch_embed_service(key, 3, cfg.d_model, 4, classes,
+                                            cfg.prefix_len)
+        return frontend, [svc]
+    if cfg.family == "audio":
+        # Mel frontend: classes are (batch, T, 1) time buckets; stride-2
+        # conv halves T, so serve mel at 2 * encoder_len.
+        frontend, services = whisper_frontend_service(
+            key, 80, cfg.d_model, classes)
+        return frontend, services
+    return None, []
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
@@ -28,10 +53,38 @@ def main(argv=None):
     ap.add_argument("--mesh", choices=["host", "production", "multipod"],
                     default="host")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--warm-plans", action="store_true",
+                    help="resolve ConvPlans for --shape-classes at "
+                         "startup and serve the conv frontend through "
+                         "them (DESIGN.md §9)")
+    ap.add_argument("--shape-classes", default=None,
+                    help="comma-separated NxHxW padded classes for "
+                         "--warm-plans, e.g. 4x32x32,4x64x64 (vlm: "
+                         "image buckets; audio: 4xTx1 time buckets)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else ARCHS[args.arch]
     model = LM(cfg)
+
+    frontend, services = None, []
+    if args.warm_plans:
+        from repro.serving.conv_service import parse_shape_classes
+        if args.shape_classes:
+            classes = parse_shape_classes(args.shape_classes)
+        elif cfg.family == "audio":
+            classes = [(args.batch, 2 * cfg.encoder_len, 1)]
+        else:
+            classes = [(args.batch, 16, 16), (args.batch, 32, 32)]
+        t0 = time.monotonic()
+        frontend, services = _warm_frontend(cfg, classes)
+        for svc in services:
+            print(svc.warmup.render())
+        if services:
+            print(f"[serve] warmed {len(services)} conv service(s) in "
+                  f"{time.monotonic() - t0:.2f}s")
+        else:
+            print(f"[serve] --warm-plans: family {cfg.family!r} has no "
+                  "conv frontend; nothing to warm")
     mesh = (make_host_mesh() if args.mesh == "host"
             else make_production_mesh(multi_pod=args.mesh == "multipod"))
     rules = default_rules(mesh)
@@ -44,11 +97,24 @@ def main(argv=None):
         batch = {"tokens": jax.random.randint(
             key, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)}
         if cfg.family == "vlm":
-            batch["vision"] = jnp.zeros(
-                (args.batch, cfg.prefix_len, cfg.d_model), jnp.float32)
+            if frontend is not None:
+                # Dummy images through the warmed patch-embed service:
+                # sized to the smallest class so bucketing is exercised.
+                cls = services[0].classes[0] if services else None
+                img = jnp.zeros((args.batch, cls.h, cls.w, 3), jnp.float32)
+                batch["vision"] = frontend(img)
+            else:
+                batch["vision"] = jnp.zeros(
+                    (args.batch, cfg.prefix_len, cfg.d_model), jnp.float32)
         if cfg.family == "audio":
-            batch["frames"] = jnp.zeros(
-                (args.batch, cfg.encoder_len, cfg.d_model), jnp.float32)
+            if frontend is not None:
+                from repro.serving.conv_service import fit_prefix
+                cls = services[0].classes[0] if services else None
+                mel = jnp.zeros((args.batch, cls.h, 80), jnp.float32)
+                batch["frames"] = fit_prefix(frontend(mel), cfg.encoder_len)
+            else:
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.encoder_len, cfg.d_model), jnp.float32)
 
         prefill = jax.jit(lambda p, b: serve_lib.prefill(model, p, b, max_len))
         decode = jax.jit(lambda p, c, t: serve_lib.decode_step(model, p, c, t))

@@ -75,6 +75,11 @@ class PlanCache:
         self._max_entries = max_entries
         self._disk_loaded = False
         self._lock = threading.Lock()
+        # Swallowed disk failures (unreadable, corrupt, read-only).  The
+        # degradation stays silent per call, but operators need to see
+        # it: the conv-service warmup surfaces this counter in the serve
+        # report (DESIGN.md §9) instead of crashing — or hiding it.
+        self.io_errors = 0
 
     # ----------------------------------------------------------- resolution
 
@@ -88,8 +93,16 @@ class PlanCache:
             return
         self._disk_loaded = True
         try:
-            doc = json.loads(self.path().read_text())
-        except (OSError, ValueError):
+            text = self.path().read_text()
+        except FileNotFoundError:
+            return            # a cache that simply isn't there yet is fine
+        except OSError:
+            self.io_errors += 1
+            return
+        try:
+            doc = json.loads(text)
+        except ValueError:
+            self.io_errors += 1  # corrupt file: degrade, but count it
             return
         if doc.get("plan_cache_version") != CACHE_FILE_VERSION:
             return
@@ -125,7 +138,7 @@ class PlanCache:
                 json.dump(doc, f, indent=1, sort_keys=True)
             os.replace(tmp, path)
         except OSError:
-            pass  # read-only environment: memory-only from here on
+            self.io_errors += 1  # read-only environment: memory-only now
 
     # ------------------------------------------------------------------ api
 

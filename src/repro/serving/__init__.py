@@ -1,0 +1,26 @@
+"""Serving layer: continuous batching + warm-plan conv serving.
+
+* :mod:`repro.serving.scheduler` — the vLLM-style slot scheduler
+  (admission, batched decode, EOS completion, slot recycling).
+* :mod:`repro.serving.conv_service` — plan-driven conv serving
+  (DESIGN.md §9): bounded padded shape classes, one warm
+  :class:`~repro.plan.ConvPlan` per class, AOT-compiled class
+  executors, best-effort plan-cache warmup.
+
+CLI::
+
+  PYTHONPATH=src python -m repro.serving --warmup-report \\
+      --shape-classes 1x32x32,4x64x64
+"""
+from repro.serving.conv_service import (ConvService, ShapeClass,
+                                        WarmupReport, fit_prefix,
+                                        parse_shape_classes,
+                                        patch_embed_service,
+                                        whisper_frontend_service)
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = [
+    "ConvService", "ShapeClass", "WarmupReport", "parse_shape_classes",
+    "fit_prefix", "whisper_frontend_service", "patch_embed_service",
+    "ContinuousBatcher", "Request",
+]

@@ -111,6 +111,11 @@ class Request:
     prompt: jnp.ndarray              # (S,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # Extra prefill-batch entries beyond "tokens", already batch-1 shaped
+    # — e.g. {"vision": (1, prefix_len, d_model)} tokens a warm
+    # conv-service frontend produced (DESIGN.md §9).  Decode is
+    # untouched: prefix state lives in the KV cache after prefill.
+    extras: Optional[Dict[str, jnp.ndarray]] = None
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
 
@@ -141,8 +146,10 @@ class ContinuousBatcher:
         while free and self.queue:
             req = self.queue.popleft()
             slot = free.pop(0)
-            logits, pre = self._prefill(self.params,
-                                        {"tokens": req.prompt[None]})
+            batch = {"tokens": req.prompt[None]}
+            if req.extras:
+                batch.update(req.extras)
+            logits, pre = self._prefill(self.params, batch)
             self.cache = insert_prefill(self.cache, slot, pre)
             tok = int(jnp.argmax(logits[0]))
             req.slot = slot
