@@ -17,8 +17,13 @@ SUITES = ("memaudit", "pallas", "lint", "all")
 
 def _run_memaudit(args) -> int:
     from repro.analysis.memaudit import write_audit
-    out, failures = write_audit(plans_path=args.plans, out_path=args.out)
+    out, failures = write_audit(
+        plans_path=args.plans, out_path=args.out,
+        calibration_store=True if args.record_calibration else None)
     print(f"memaudit: report written to {out}")
+    if args.record_calibration:
+        print("memaudit: gated ratios recorded to the calibration store "
+              "(repro.plan.calibrate)")
     if failures:
         print(f"memaudit: {len(failures)} gate failure(s):")
         for f in failures:
@@ -100,6 +105,10 @@ def main(argv=None) -> int:
     parser.add_argument("--out", default=None,
                         help="memaudit report path "
                              "(default: BENCH_memaudit.json)")
+    parser.add_argument("--record-calibration", action="store_true",
+                        help="record gated measured/predicted ratios "
+                             "into the fitted-costmodel store "
+                             "(repro.plan.calibrate, DESIGN.md §10)")
     parser.add_argument("--lint-baseline", default=None,
                         help="lint baseline JSON (default: "
                              "benchmarks/baselines/lint_baseline.json)")

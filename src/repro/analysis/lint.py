@@ -13,9 +13,10 @@ class it prevents:
 
 ``raw-environ-read-outside-compat``
     ``os.environ[...]`` / ``os.environ.get`` / ``os.getenv`` read
-    anywhere but ``core/compat.py`` and the plan cache
-    (``plan/cache.py``).  Env reads are version/deployment surface; one
-    module owning them is what lets the jax-matrix CI leg work.
+    anywhere but ``core/compat.py``, the plan cache (``plan/cache.py``),
+    and the calibration store (``plan/calibrate.py``).  Env reads are
+    version/deployment surface; one module owning them is what lets the
+    jax-matrix CI leg work.
 
 ``shard-map-import-outside-compat``
     ``shard_map`` imported from jax anywhere but ``core/compat.py`` —
@@ -56,8 +57,9 @@ RULES = (
 )
 
 # Files allowed to read the environment raw: the version-compat shim and
-# the plan cache (whose directory override IS its public configuration).
-_ENVIRON_ALLOWED = ("core/compat.py", "plan/cache.py")
+# the plan cache + calibration store (whose directory/file overrides ARE
+# their public configuration).
+_ENVIRON_ALLOWED = ("core/compat.py", "plan/cache.py", "plan/calibrate.py")
 _SHARD_MAP_ALLOWED = ("core/compat.py",)
 _ACC_BYTES_ENV = "REPRO_MEC_ACC_BYTES"
 

@@ -167,14 +167,42 @@ def load_plans(path) -> Dict[str, object]:
             for name, d in sorted(doc["plans"].items())}
 
 
+def record_calibration(records: Sequence[Dict], store=None) -> int:
+    """Feed the memory-side fit (DESIGN.md §10): every tolerance-gated
+    measured/predicted ratio becomes a memory sample in the calibration
+    store.  ``recorded``-policy cells (Pallas off-TPU, absent memory
+    stats) never train the fit — their temps are XLA interpret-mode
+    artifacts, not the algorithm's memory story.  Returns the number of
+    samples added; flushes (best-effort) when it created the store.
+    """
+    from repro.plan.calibrate import CalibrationStore
+    own = store is None
+    store = store or CalibrationStore()
+    n = 0
+    for rec in records:
+        if rec.get("policy") != "gated" or rec.get("ratio") is None:
+            continue
+        store.add_memory(ConvSpec(**rec["spec"]), rec["dtype"],
+                         _base_algorithm(rec["algorithm"]),
+                         float(rec["ratio"]))
+        n += 1
+    if own and n:
+        store.flush()
+    return n
+
+
 def run_audit(plans_path=None,
-              plans: Optional[Dict[str, object]] = None
-              ) -> Tuple[Dict, List[str]]:
+              plans: Optional[Dict[str, object]] = None,
+              calibration_store=None) -> Tuple[Dict, List[str]]:
     """Audit every baseline plan (+ an im2col companion per mec cell).
 
     Returns ``(report_doc, failures)`` — the doc validates against the
     bench-report ``memaudit`` suite schema; failures is the flat list of
-    gate violations (empty == audit passed).
+    gate violations (empty == audit passed).  Pass a
+    ``repro.plan.calibrate.CalibrationStore`` (or ``True`` for the
+    ambient one) to additionally record the gated ratios as memory
+    samples for the fitted costmodel — opt-in, so a plain audit never
+    mutates planner state.
     """
     from repro.bench.report import make_report
     if plans is None:
@@ -213,6 +241,9 @@ def run_audit(plans_path=None,
                     f"{scenario}: Eq. 4 predicts a {saving}-element "
                     f"saving but measured mec temp {mec_b}B >= "
                     f"im2col temp {im2col_b}B")
+    if calibration_store is not None and calibration_store is not False:
+        record_calibration(
+            results, None if calibration_store is True else calibration_store)
     doc = make_report(
         "memaudit", results,
         harness={
@@ -224,11 +255,11 @@ def run_audit(plans_path=None,
     return doc, failures
 
 
-def write_audit(plans_path=None, out_path=None) -> Tuple[pathlib.Path,
-                                                         List[str]]:
+def write_audit(plans_path=None, out_path=None,
+                calibration_store=None) -> Tuple[pathlib.Path, List[str]]:
     from repro.bench.report import write_report
     root = pathlib.Path(__file__).resolve().parents[3]
-    doc, failures = run_audit(plans_path)
+    doc, failures = run_audit(plans_path, calibration_store=calibration_store)
     out = pathlib.Path(out_path or root / DEFAULT_REPORT)
     write_report(doc, out)
     return out, failures

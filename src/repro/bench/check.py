@@ -20,6 +20,12 @@ Every baseline scenario/algorithm cell must be present in the new
 report; missing cells fail (a suite silently losing coverage is itself
 a regression).  Extra cells in the new report are fine.
 
+Autotune documents (``BENCH_autotune.json``, detected by their
+``autotune_schema_version``) get their own policy: exact on the
+decision fields (``analytic_algorithm``, ``run_spec``, ``dtype``),
+loud on newly-``skipped`` candidates, tolerance on the measured us
+fields, and never-failing notes on the spread fields.
+
 Exit status: 0 clean, 1 regression/schema failure, 2 usage error.
 
   PYTHONPATH=src python -m repro.bench.check BENCH_smoke.json \\
@@ -63,11 +69,109 @@ def _load(path) -> Dict:
         raise SystemExit(f"[bench.check] {p} is not valid JSON: {e}")
 
 
+# Autotune documents (repro.bench.harness.run_autotune) carry their own
+# schema; per cell these fields are deterministic given an environment +
+# calibration and gate exactly, while measured decisions and anything
+# us-valued follow the timing policy (noted / tolerance-checked).
+AUTOTUNE_EXACT_FIELDS = ("dtype", "run_spec", "analytic_algorithm")
+AUTOTUNE_SCHEMA_VERSIONS = (1, 2)
+
+
+def _compare_autotune(new: Dict, baseline: Dict, timing_rtol: float,
+                      schema_only_on_timing: bool
+                      ) -> Tuple[List[str], List[str]]:
+    """Autotune-report diff: exact on the decision fields, tolerance on
+    the measured/spread fields, and — the satellite of DESIGN.md §10 —
+    loud on coverage: a candidate newly ``skipped`` relative to the
+    baseline is a real loss of the race, not noise."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for label, doc in (("new report", new), ("baseline", baseline)):
+        v = doc.get("autotune_schema_version")
+        if v not in AUTOTUNE_SCHEMA_VERSIONS:
+            failures.append(f"schema ({label}): autotune_schema_version "
+                            f"{v!r} not in {AUTOTUNE_SCHEMA_VERSIONS}")
+        if not isinstance(doc.get("results"), list) or not doc.get("results"):
+            failures.append(f"schema ({label}): results must be a "
+                            "non-empty list")
+    if failures:
+        return failures, notes
+    if new.get("base_suite") != baseline.get("base_suite"):
+        failures.append(f"base_suite mismatch: new={new.get('base_suite')!r} "
+                        f"baseline={baseline.get('base_suite')!r}")
+        return failures, notes
+    backend_differs = (new["environment"]["backend"]
+                       != baseline["environment"]["backend"])
+    exact = AUTOTUNE_EXACT_FIELDS
+    if backend_differs:
+        notes.append(f"backend differs: new={new['environment']['backend']} "
+                     f"baseline={baseline['environment']['backend']} "
+                     "(analytic_algorithm not compared)")
+        exact = tuple(f for f in exact if f != "analytic_algorithm")
+    if (new.get("calibration") or {}).get("active") != \
+            (baseline.get("calibration") or {}).get("active"):
+        notes.append(
+            f"calibration active differs: new="
+            f"{(new.get('calibration') or {}).get('active')!r} baseline="
+            f"{(baseline.get('calibration') or {}).get('active')!r} "
+            "(analytic picks may legitimately move)")
+        exact = tuple(f for f in exact if f != "analytic_algorithm")
+    key = lambda r: f"{r['scenario']}/{r.get('dtype')}"  # noqa: E731
+    new_by_key = {key(r): r for r in new["results"]}
+    for base in baseline["results"]:
+        k = key(base)
+        rec = new_by_key.get(k)
+        if rec is None:
+            failures.append(f"{k}: missing from new report "
+                            "(coverage regression)")
+            continue
+        for f in exact:
+            if rec.get(f) != base.get(f):
+                failures.append(f"{k}: {f} changed {base.get(f)!r} -> "
+                                f"{rec.get(f)!r}")
+        for f in ("measured_algorithm", "pick_agrees"):
+            if rec.get(f) != base.get(f):
+                notes.append(f"{k}: {f} drifted {base.get(f)!r} -> "
+                             f"{rec.get(f)!r} (measured; informational)")
+        new_skips = set(rec.get("skipped") or {}) \
+            - set(base.get("skipped") or {})
+        if new_skips:
+            failures.append(
+                f"{k}: candidate(s) newly skipped vs baseline: "
+                + ", ".join(f"{a} ({(rec.get('skipped') or {})[a]})"
+                            for a in sorted(new_skips)))
+        if schema_only_on_timing:
+            continue
+        for f in ("measured_us", "analytic_us"):
+            b_us, n_us = base.get(f), rec.get(f)
+            if b_us is None or n_us is None:
+                continue
+            if n_us > b_us * (1.0 + timing_rtol):
+                failures.append(f"{k}: {f} regressed {b_us:.0f} -> "
+                                f"{n_us:.0f} (> {1.0 + timing_rtol:.1f}x "
+                                "baseline)")
+        b_sp, n_sp = base.get("max_rel_spread"), rec.get("max_rel_spread")
+        if b_sp is not None and n_sp is not None and n_sp > b_sp * 4 \
+                and n_sp > 0.25:
+            notes.append(f"{k}: max_rel_spread grew {b_sp} -> {n_sp} "
+                         "(noisy run; spread fields never fail)")
+    extra = set(new_by_key) - {key(r) for r in baseline["results"]}
+    if extra:
+        notes.append(f"{len(extra)} cells not in baseline (new coverage): "
+                     + ", ".join(sorted(extra)[:5])
+                     + ("..." if len(extra) > 5 else ""))
+    return failures, notes
+
+
 def compare(new: Dict, baseline: Dict, timing_rtol: float = 1.0,
             schema_only_on_timing: bool = False) -> Tuple[List[str], List[str]]:
     """(failures, notes) from diffing ``new`` against ``baseline``."""
     failures: List[str] = []
     notes: List[str] = []
+    if "autotune_schema_version" in new \
+            or "autotune_schema_version" in baseline:
+        return _compare_autotune(new, baseline, timing_rtol,
+                                 schema_only_on_timing)
     for label, doc in (("new report", new), ("baseline", baseline)):
         for err in validate_report(doc):
             failures.append(f"schema ({label}): {err}")

@@ -51,7 +51,13 @@ def make_arrays(s: ConvSpec, dtype: str = "float32", seed: int = 0):
 
 
 def time_compiled(call, iters: int = 3, warmup: int = 1) -> Dict:
-    """Steady-state wall-clock stats (microseconds) of a nullary call."""
+    """Steady-state wall-clock stats (microseconds) of a nullary call.
+
+    ``us_std`` / ``us_rel_spread`` (std over median) quantify the
+    run-to-run jitter of the timed iterations — the data behind the
+    planner's ``MEASURED_NOISE_MARGIN``: a measured flip is only
+    trustworthy when the margin dominates the observed spread.
+    """
     for _ in range(max(warmup, 1)):
         jax.block_until_ready(call())
     us: List[float] = []
@@ -59,9 +65,12 @@ def time_compiled(call, iters: int = 3, warmup: int = 1) -> Dict:
         t0 = time.perf_counter()
         jax.block_until_ready(call())
         us.append((time.perf_counter() - t0) * 1e6)
+    median = float(np.median(us))
+    std = float(np.std(us))
     return {"iters": max(iters, 1), "warmup": max(warmup, 1),
-            "us_median": float(np.median(us)), "us_min": float(min(us)),
-            "us_mean": float(np.mean(us))}
+            "us_median": median, "us_min": float(min(us)),
+            "us_mean": float(np.mean(us)), "us_std": std,
+            "us_rel_spread": (std / median if median > 0 else None)}
 
 
 def _analytic_flops(spec: ConvSpec, algorithm: str) -> float:
@@ -376,27 +385,46 @@ def run_autotune(base_suite: str = "smoke", iters: int = 3, warmup: int = 1,
 
     For every scenario in ``base_suite``, derive the analytic plan on
     the *timed* geometry (``run_spec`` — both picks must be judged on
-    the shapes actually measured), run the measured policy's candidate
-    timing loop (``repro.plan.measure_candidates`` — the same loop
+    the shapes actually measured), then run the full measured policy
+    (``repro.plan.tune_measured`` — the same staged race + knob grid
     ``plan_conv2d(mode="measured")`` uses, so these numbers ARE the
-    planner's numbers), and record both picks with their steady-state
+    planner's numbers) and record both picks with their steady-state
     times.  ``speedup`` > 1 means measured autotuning beat the analytic
     costmodel on that cell.
+
+    Schema v2 additions (DESIGN.md §10): per-candidate full timing
+    stats including spread (``candidate_stats``) — the evidence behind
+    the 5%% noise margin; candidates that could not be timed with their
+    reasons (``skipped``/``n_skipped`` — nothing is dropped silently);
+    the stage-2 knob grid (``tuning``) and final measured ``plan``; and
+    the active calibration's provenance (every trial here feeds the
+    calibration store, so autotune runs are the fitted costmodel's
+    training data).
     """
     from repro.bench.report import environment_fingerprint
-    from repro.plan import measure_candidates, pick_measured, plan_conv2d
+    from repro.plan import pick_measured, plan_conv2d, tune_measured
+    from repro.plan.calibrate import calibration_info
+    from repro.plan.convplan import MEASURED_NOISE_MARGIN
     results: List[Dict] = []
     for sc in resolve_suite(base_suite):
         if progress:
             progress(f"[bench] autotune/{sc.name}")
         analytic = plan_conv2d(sc.run_spec, dtype=sc.dtype, mode="analytic",
                                partition="none")
-        times = measure_candidates(sc.run_spec, sc.dtype, iters=iters,
-                                   warmup=warmup, interpret=interpret)
-        # The planner's own decision rule (noise-margin tie to analytic).
-        measured_alg = pick_measured(times, analytic.algorithm)
+        plan, detail = tune_measured(sc.run_spec, sc.dtype, iters=iters,
+                                     warmup=warmup, interpret=interpret,
+                                     candidates=sc.tune_candidates)
+        times = detail["candidate_us"]
+        # The planner's own decision rule: noise-margin tie to analytic,
+        # margin widened to each candidate's observed rel spread (§10).
+        measured_alg = pick_measured(times, analytic.algorithm, spreads={
+            a: s.get("us_rel_spread")
+            for a, s in detail["candidate_stats"].items()})
         analytic_us = times.get(analytic.algorithm)
         measured_us = times[measured_alg]
+        spreads = [s.get("us_rel_spread")
+                   for s in detail["candidate_stats"].values()
+                   if s.get("us_rel_spread") is not None]
         results.append({
             "scenario": sc.name,
             "dtype": sc.dtype,
@@ -406,16 +434,25 @@ def run_autotune(base_suite: str = "smoke", iters: int = 3, warmup: int = 1,
             "measured_algorithm": measured_alg,
             "measured_us": measured_us,
             "candidate_us": {a: times[a] for a in sorted(times)},
+            "candidate_stats": {a: detail["candidate_stats"][a]
+                                for a in sorted(detail["candidate_stats"])},
+            "skipped": dict(sorted(detail["skipped"].items())),
+            "n_skipped": len(detail["skipped"]),
+            "max_rel_spread": (round(max(spreads), 4) if spreads else None),
+            "tuning": detail["tuning"],
+            "plan": plan.to_dict(),
             "speedup": (None if not analytic_us
                         else round(analytic_us / measured_us, 3)),
             "pick_agrees": measured_alg == analytic.algorithm,
         })
     return {
-        "autotune_schema_version": 1,
+        "autotune_schema_version": 2,
         "suite": "autotune",
         "base_suite": base_suite,
         "environment": environment_fingerprint(),
+        "calibration": calibration_info(),
         "harness": {"iters": iters, "warmup": warmup,
-                    "interpret": interpret},
+                    "interpret": interpret,
+                    "noise_margin": MEASURED_NOISE_MARGIN},
         "results": results,
     }

@@ -20,7 +20,8 @@ Suites (resolve with :func:`resolve_suite`):
 ``batch``        batch-size diversity (cv9 at n = 1/4/16)
 ``channels``     channel-count diversity (cv12 geometry, widths 32..512)
 ``dtype``        dtype diversity (cv9 in f32 and bf16)
-``smoke``        CI subset: 3 small layers x all algorithms, < 2 min
+``smoke``        CI subset: 3 small layers x all algorithms plus a
+                 ``w_blk``-tuning Pallas cell, < 2 min
 ``dist``         distributed execution (DESIGN.md §6): per-device
                  overhead + halo-bytes analytics on 2/8/256-way spatial
                  partitions of cv1-cv12 and on composite 2-D partitions
@@ -107,6 +108,14 @@ class Scenario:
     # jax.device_count().
     partition: Union[str, Tuple[str, ...], None] = None
     n_dev: Union[int, Tuple[int, ...]] = 1
+    # Measured-mode candidate restriction (DESIGN.md §10): when set, the
+    # autotune suite races exactly these ``conv2d`` algorithm names
+    # instead of every eligible candidate.  Kernel-tuning cells use it
+    # to keep the stage-1 race inside the Pallas variants so the stage-2
+    # knob grid (``w_blk``) is what the cell exercises.  Names here are
+    # executor algorithm names ("mec", "mec_fused", ...), not the
+    # mecA/mecB bench-variant names.
+    tune_candidates: Union[Tuple[str, ...], None] = None
 
 
 def layer_spec(name: str, batch: int = 1,
@@ -174,18 +183,32 @@ def _dtype() -> Tuple[Scenario, ...]:
 
 
 def _smoke() -> Tuple[Scenario, ...]:
-    # Three small layers x every algorithm, sized so the full suite
-    # (including interpret-mode Pallas) stays well under 2 minutes on one
-    # CPU core: a winograd-eligible 3x3/s1, a strided 5x5, and a
-    # cv1-shaped 11x11/s4.
+    # Three small layers x every algorithm plus one kernel-tuning cell,
+    # sized so the full suite (including interpret-mode Pallas) stays
+    # well under 2 minutes on one CPU core: a winograd-eligible 3x3/s1,
+    # a strided 5x5, a cv1-shaped 11x11/s4, and a wide row whose o_w
+    # exceeds the w_blk accumulator cap.
     shapes = {
         "s3x3": ConvSpec(1, 14, 14, 4, 3, 3, 8, 1, 1),
         "s5x5": ConvSpec(1, 16, 16, 3, 5, 5, 8, 2, 2),
         "s11x11": ConvSpec(1, 23, 23, 3, 11, 11, 8, 4, 4),
     }
-    return tuple(Scenario(name=n, spec=s, run_spec=s,
-                          algorithms=eligible_algorithms(s))
-                 for n, s in shapes.items())
+    cells = [Scenario(name=n, spec=s, run_spec=s,
+                      algorithms=eligible_algorithms(s))
+             for n, s in shapes.items()]
+    # Kernel-tuning cell (DESIGN.md §10): o_w=520 sits just above
+    # pick_w_blk's 512-column accumulator cap, so the planner default
+    # splits the row into two grid steps while the stage-2 grid's
+    # min(o_w, 2*default)=520 trial covers it in one — a structural
+    # (grid-step count) gap the measured tuner must find, independent of
+    # timer jitter.  The race is restricted to the Pallas variants so
+    # stage 2 tunes w_blk rather than re-litigating the algorithm pick.
+    w520 = ConvSpec(1, 3, 522, 3, 3, 3, 8, 1, 1)
+    cells.append(Scenario(
+        name="w520", spec=w520, run_spec=w520,
+        algorithms=("mec_lowered", "mec_fused", "mec_fused2"),
+        tune_candidates=("mec_lowered", "mec_fused", "mec_fused2")))
+    return tuple(cells)
 
 
 def _dist() -> Tuple[Scenario, ...]:

@@ -248,10 +248,20 @@ def cell_cost(cfg, kind: str, b: int, s: int, mesh: MeshShape) -> Dict:
 # ----------------------------------------------------- conv2d algorithm choice
 # Consulted by repro.core.conv_api.conv2d(algorithm="auto"); the scoring
 # combines the paper's analytic memory overheads (§3.4, repro.core.memory)
-# with mult-add counts.  Full rules documented in DESIGN.md §1.
+# with mult-add counts.  Full rules documented in DESIGN.md §1; the fitted
+# correction layer (repro.plan.calibrate) in DESIGN.md §10.
 
-def conv2d_algorithm_costs(spec) -> Dict[str, Dict[str, float]]:
-    """Per-eligible-algorithm {flops, overhead_elems} for one ConvSpec."""
+def conv2d_algorithm_costs(spec, calibration=None) -> Dict[str, Dict[str, float]]:
+    """Per-eligible-algorithm {flops, overhead_elems} for one ConvSpec.
+
+    With a ``repro.plan.calibrate.Calibration``, each entry additionally
+    carries the fitted view: ``calibrated_overhead_elems`` (Eq. 2-3
+    scaled by the measured/predicted byte ratio), ``measured_us`` (this
+    cell's own autotune evidence, None without it) and ``time_us_est``
+    (the fitted Eq. 2-4 time model, None for unfitted algorithms).  The
+    default (None) keeps the paper's uncalibrated constants — bench
+    reports gate these fields exactly, so they must stay deterministic.
+    """
     from repro.core import memory
     base = memory.conv_flops(spec)
     costs: Dict[str, Dict[str, float]] = {}
@@ -270,6 +280,15 @@ def conv2d_algorithm_costs(spec) -> Dict[str, Dict[str, float]]:
                 + 8.0 * spec.i_n * hw * spec.i_c * spec.k_c
         costs[alg] = {"flops": flops,
                       "overhead_elems": float(overhead(spec))}
+    if calibration is not None:
+        cell = calibration.cell_times(spec)
+        constants = calibration.time_constants()
+        for alg, entry in costs.items():
+            entry["calibrated_overhead_elems"] = \
+                entry["overhead_elems"] * calibration.mem_ratio_for(alg)
+            entry["measured_us"] = cell.get(alg)
+            entry["time_us_est"] = calibration.time_estimate(
+                spec, alg, constants)
     return costs
 
 
@@ -287,7 +306,8 @@ def _halo_rows(spec) -> int:
     return spatial_halo_rows(spec.k_h, spec.s_h)
 
 
-def conv_partition_costs(spec, n_dev, dtype_bytes: int = 4) -> Dict:
+def conv_partition_costs(spec, n_dev, dtype_bytes: int = 4,
+                         calibration=None) -> Dict:
     """Per-partition per-device cost terms for an ``n_dev``-way split.
 
     ``n_dev`` as an int evaluates the three 1-D modes (keys ``"batch"``/
@@ -311,6 +331,11 @@ def conv_partition_costs(spec, n_dev, dtype_bytes: int = 4) -> Dict:
       component leaves local (e.g. batch x channel psums a ``k_c/n1``
       kernel shard and an ``i_n/n0`` input shard);
     * ``flops_per_device``.
+
+    A ``repro.plan.calibrate.Calibration`` scales the two per-device
+    Eq. 2-3 memory predictions by the memaudit-fitted byte ratios
+    (comm-byte and flops terms are geometric, not fitted).  Default None
+    keeps the gated analytic fields deterministic.
     """
     import dataclasses as _dc
 
@@ -318,6 +343,10 @@ def conv_partition_costs(spec, n_dev, dtype_bytes: int = 4) -> Dict:
     from repro.parallel.conv import COMPOSITE_PARTITIONS
 
     halo = _halo_rows(spec)
+    mec_ratio = 1.0 if calibration is None \
+        else calibration.mem_ratio_for("mec")
+    im2col_ratio = 1.0 if calibration is None \
+        else calibration.mem_ratio_for("im2col")
 
     def ceil_div(a, b):
         return -(-a // b)
@@ -361,8 +390,10 @@ def conv_partition_costs(spec, n_dev, dtype_bytes: int = 4) -> Dict:
                                        else sizes[0])),
             "n_dev": int(n_total),
             "n_dev_axes": [int(n) for n in sizes],
-            "per_device_overhead_elems": float(memory.mec_overhead(lspec)),
-            "per_device_im2col_elems": float(memory.im2col_overhead(lspec)),
+            "per_device_overhead_elems":
+                float(memory.mec_overhead(lspec)) * mec_ratio,
+            "per_device_im2col_elems":
+                float(memory.im2col_overhead(lspec)) * im2col_ratio,
             "halo_bytes_per_device": float(halo_bytes),
             "comm_bytes_fwd_per_device": float(fwd),
             "comm_bytes_bwd_per_device": float(bwd),
@@ -389,7 +420,7 @@ def _viable(spec, partition, n_dev) -> bool:
 
 
 def pick_conv_partition(spec, axis_sizes: Dict,
-                        dtype_bytes: int = 4):
+                        dtype_bytes: int = 4, calibration=None):
     """Cheapest viable partition for ``sharded_conv2d(partition='auto')``.
 
     axis_sizes maps a candidate — a partition name, or a composite tuple
@@ -398,10 +429,15 @@ def pick_conv_partition(spec, axis_sizes: Dict,
     the winning key, or None when no mode can split the geometry over
     more than one device (caller falls back to single-device execution).
     Ranking: fewest fwd+bwd interconnect bytes per device; ties go to
-    ``batch`` (embarrassingly parallel), then ``spatial``, then
-    ``channel`` — the paper's preference order for keeping the lowered
-    buffer, not the activations, on the wire — then to 1-D modes over
-    composites (fewer axes on the wire for the same comm bytes).
+    the lowest *calibrated* per-device Eq. 3 overhead when a
+    ``repro.plan.calibrate.Calibration`` is supplied (comm bytes are
+    geometric — the memory fit is the only measured term a partition
+    choice can consult), then to ``batch`` (embarrassingly parallel),
+    then ``spatial``, then ``channel`` — the paper's preference order
+    for keeping the lowered buffer, not the activations, on the wire —
+    then to 1-D modes over composites (fewer axes on the wire for the
+    same comm bytes).  Without a calibration the overhead tie-break term
+    is constant, so the committed dist picks are unchanged.
     """
     from repro.parallel.conv import COMPOSITE_PARTITIONS, PARTITIONS
     order = ("batch", "spatial", "channel") + COMPOSITE_PARTITIONS
@@ -435,15 +471,20 @@ def pick_conv_partition(spec, axis_sizes: Dict,
             # component, which is enumerated separately.
             if min(n) <= 1 or not _viable(spec, part, n):
                 continue
-        c = conv_partition_costs(spec, n, dtype_bytes)[part]
-        cost = c["comm_bytes_fwd_per_device"] + c["comm_bytes_bwd_per_device"]
+        c = conv_partition_costs(spec, n, dtype_bytes,
+                                 calibration=calibration)[part]
+        cost = (c["comm_bytes_fwd_per_device"]
+                + c["comm_bytes_bwd_per_device"],
+                c["per_device_overhead_elems"] if calibration is not None
+                else 0.0)
         if best_cost is None or cost < best_cost:
             best, best_cost = part, cost
     return best
 
 
-def pick_conv2d_algorithm(spec, backend: str | None = None) -> str:
-    """Dispatch rule for conv2d(algorithm='auto') — DESIGN.md §1.
+def pick_conv2d_algorithm(spec, backend: str | None = None,
+                          calibration="ambient") -> str:
+    """Dispatch rule for conv2d(algorithm='auto') — DESIGN.md §1, §10.
 
     * 1x1 kernels: lowering is a no-op, direct wins outright.
     * TPU backend: the fused Pallas kernel (no L in HBM at all) is the
@@ -452,6 +493,19 @@ def pick_conv2d_algorithm(spec, backend: str | None = None) -> str:
       saves memory over im2col (k_h > s_h row overlap, Eq. 4), else
       direct — never im2col/fft/winograd, which only trade memory away
       for speed XLA already gets from its direct conv.
+
+    Calibration (DESIGN.md §10): ``calibration="ambient"`` consults the
+    fitted store for this environment ($REPRO_CALIBRATION or the
+    fingerprinted file beside the plan cache) when one exists; pass
+    ``None`` to force the paper's uncalibrated constants (what bench
+    reports gate), or an explicit ``Calibration``.  A calibration whose
+    backend differs from ``backend`` is ignored.  Two corrections apply:
+    the Eq. 4 memory comparison runs on byte-ratio-scaled overheads, and
+    — only where this exact cell has measured evidence covering the
+    analytic pick and at least one rival — the pick defers to the
+    measurements through ``pick_measured``'s noise margin.  Fitted
+    global constants alone never flip a cell: three smoke measurements
+    must not rewrite Table 2.
     """
     import jax
 
@@ -460,9 +514,21 @@ def pick_conv2d_algorithm(spec, backend: str | None = None) -> str:
         return "direct"
     if backend == "tpu":
         return "mec_fused"
-    costs = conv2d_algorithm_costs(spec)
+    from repro.plan.calibrate import resolve_calibration
+    calib = resolve_calibration(calibration, backend)
+    costs = conv2d_algorithm_costs(spec, calibration=calib)
     # MEC pays for itself iff its compact L is strictly smaller than the
-    # im2col lowering it replaces (equivalent to Eq. 4 saving > 0).
-    if costs["mec"]["overhead_elems"] < costs["im2col"]["overhead_elems"]:
-        return "mec"
-    return "direct"
+    # im2col lowering it replaces (equivalent to Eq. 4 saving > 0) —
+    # both sides scaled by the memaudit-fitted byte ratios when
+    # calibrated (measured mec temps run >1x Eq. 3 on CPU, im2col 1.00x).
+    mec_ovh = costs["mec"].get("calibrated_overhead_elems",
+                               costs["mec"]["overhead_elems"])
+    im2col_ovh = costs["im2col"].get("calibrated_overhead_elems",
+                                     costs["im2col"]["overhead_elems"])
+    analytic = "mec" if mec_ovh < im2col_ovh else "direct"
+    if calib is not None:
+        cell = calib.cell_times(spec)
+        if analytic in cell and len(cell) >= 2:
+            from repro.plan.convplan import pick_measured
+            return pick_measured(cell, analytic)
+    return analytic

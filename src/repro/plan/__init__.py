@@ -8,16 +8,26 @@ process+disk plan cache lives in :mod:`repro.plan.cache`; the CLI
 """
 from repro.plan.cache import (PlanCache, global_plan_cache, plan_cache_dir,
                               reset_global_plan_cache)
+from repro.plan.calibrate import (CALIBRATION_ENV, Calibration,
+                                  CalibrationStore, calibration_path,
+                                  current_calibration,
+                                  reset_calibration_cache)
 from repro.plan.convplan import (MEASURED_NOISE_MARGIN, PLAN_MODES,
                                  PLAN_VERSION, ConvPlan,
-                                 eligible_candidates, measure_candidates,
-                                 pick_measured, plan_cache_key, plan_conv2d,
-                                 resolve_cached_plan, spec_key)
+                                 MeasuredCandidates, eligible_candidates,
+                                 measure_candidates,
+                                 measure_candidates_detailed, pick_measured,
+                                 plan_cache_key, plan_conv2d,
+                                 resolve_cached_plan, spec_key,
+                                 tune_measured)
 
 __all__ = [
     "ConvPlan", "plan_conv2d", "resolve_cached_plan", "measure_candidates",
+    "measure_candidates_detailed", "MeasuredCandidates", "tune_measured",
     "pick_measured", "eligible_candidates", "spec_key", "plan_cache_key",
     "MEASURED_NOISE_MARGIN", "PLAN_MODES", "PLAN_VERSION",
     "PlanCache", "global_plan_cache", "plan_cache_dir",
     "reset_global_plan_cache",
+    "Calibration", "CalibrationStore", "CALIBRATION_ENV",
+    "calibration_path", "current_calibration", "reset_calibration_cache",
 ]

@@ -2,14 +2,22 @@
 them against a committed baseline (CI's costmodel-drift gate).
 
   PYTHONPATH=src python -m repro.plan --suites smoke,table2 \\
-      --out plans.json [--baseline benchmarks/baselines/plans.json]
+      --out plans.json [--baseline benchmarks/baselines/plans.json] \\
+      [--calibration benchmarks/baselines/calibration.json]
+
+  PYTHONPATH=src python -m repro.plan calibrate --report|--check|--fit
 
 The baseline diff is exact on the *decision* fields — ``algorithm``,
 ``solution``, ``partition``, ``partition_axes`` — mirroring
 ``repro.bench.check``'s stance on analytic fields: a costmodel change
 that flips any pick fails loudly and the baseline must be regenerated
-on purpose.  ``w_blk`` is device-dependent and only noted.  Exit
-status: 0 clean, 1 drift/schema failure, 2 usage error.
+on purpose.  ``w_blk`` is device-dependent and only noted.
+``--calibration`` pins the fitted costmodel (DESIGN.md §10) the picks
+consult, so a committed calibrated baseline reproduces on machines with
+an empty store; the default is the ambient store.  The ``calibrate``
+subcommand (``repro.plan.calibrate``) reports/gates/builds the
+coefficient file itself.  Exit status: 0 clean, 1 drift/schema failure,
+2 usage error.
 """
 from __future__ import annotations
 
@@ -27,10 +35,13 @@ EXACT_PLAN_FIELDS = ("algorithm", "solution", "partition", "partition_axes")
 NOTE_PLAN_FIELDS = ("w_blk", "precision")
 
 
-def build_plans(suites, mode: str = "analytic") -> Dict:
+def build_plans(suites, mode: str = "analytic",
+                calibration="ambient", calibration_path=None) -> Dict:
     from repro.bench.report import environment_fingerprint
     from repro.bench.scenarios import resolve_suite
-    from repro.plan import plan_conv2d
+    from repro.plan import current_calibration, plan_conv2d
+    active = (current_calibration() is not None
+              if calibration == "ambient" else calibration is not None)
     plans: Dict[str, Dict] = {}
     for suite in suites:
         for sc in resolve_suite(suite):
@@ -40,12 +51,18 @@ def build_plans(suites, mode: str = "analytic") -> Dict:
             # Paper geometry, single-device: the committed baseline must
             # not depend on how many host devices CI forces.
             plans[key] = plan_conv2d(sc.spec, dtype=sc.dtype, mode=mode,
-                                     partition="none").to_dict()
+                                     partition="none",
+                                     calibration=calibration).to_dict()
     return {
         "plans_schema_version": PLANS_SCHEMA_VERSION,
         "suites": list(suites),
         "mode": mode,
         "environment": environment_fingerprint(),
+        "calibration": {
+            "path": None if calibration_path is None
+            else str(calibration_path),
+            "active": active,
+        },
         "plans": plans,
     }
 
@@ -95,6 +112,10 @@ def compare_plans(new: Dict, baseline: Dict) -> Tuple[List[str], List[str]]:
 
 
 def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "calibrate":
+        from repro.plan.calibrate import calibrate_main
+        return calibrate_main(argv[1:])
     ap = argparse.ArgumentParser(prog="repro.plan",
                                  description=__doc__.splitlines()[0])
     ap.add_argument("--suites", default="smoke,table2",
@@ -107,9 +128,27 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=None,
                     help="committed plans.json to diff against "
                          "(exact on algorithm/solution/partition fields)")
+    ap.add_argument("--calibration", default=None,
+                    help="calibration JSON the picks consult (fitted "
+                         "costmodel, DESIGN.md §10); default: the "
+                         "ambient store ($REPRO_CALIBRATION or the "
+                         "fingerprinted file beside the plan cache)")
     args = ap.parse_args(argv)
     suites = [s for s in args.suites.split(",") if s]
-    doc = build_plans(suites, mode=args.mode)
+    calibration = "ambient"
+    if args.calibration:
+        from repro.plan.calibrate import _load_file
+        calibration = _load_file(pathlib.Path(args.calibration),
+                                 strict_fingerprint=False)
+        if calibration is None:
+            # A named calibration that cannot apply here must be loud:
+            # the whole point of pinning the file is reproducibility.
+            print(f"[plan] --calibration {args.calibration} is missing, "
+                  "unreadable, or fitted for another backend/device "
+                  "kind", file=sys.stderr)
+            return 2
+    doc = build_plans(suites, mode=args.mode, calibration=calibration,
+                      calibration_path=args.calibration)
     if args.out:
         pathlib.Path(args.out).write_text(
             json.dumps(doc, indent=2, sort_keys=True) + "\n")

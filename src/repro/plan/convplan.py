@@ -17,7 +17,13 @@ cached (``repro.plan.cache``), and executed exactly by the thin
               per call — now derived once.
 ``measured``  AOT-compile every candidate algorithm and time it through
               the ``repro.bench.harness`` steady-state protocol; the
-              wall-clock winner becomes the plan.
+              wall-clock winner becomes the plan.  A second stage then
+              tunes the winner's knobs — the MEC solution (§3.2
+              Solutions 1-2: h- vs w-direction lowering) or the Pallas
+              ``w_blk`` — over a small measured grid, and every trial
+              is recorded into the calibration store
+              (``repro.plan.calibrate``, DESIGN.md §10): autotune runs
+              are the fitted costmodel's training data.
 ``cached``    process-level LRU backed by an on-disk JSON cache keyed
               by spec+dtype+backend (env-fingerprinted file); a miss
               falls back to ``analytic`` and populates both tiers.
@@ -367,13 +373,28 @@ MEASURED_NOISE_MARGIN = 0.05
 
 
 def pick_measured(times: Dict[str, float], analytic: str,
-                  margin: float = MEASURED_NOISE_MARGIN) -> str:
+                  margin: float = MEASURED_NOISE_MARGIN,
+                  spreads: Optional[Dict[str, float]] = None) -> str:
     """The measured policy's decision rule (shared with the autotune
     bench suite): fastest candidate, except the analytic pick is kept
-    whenever it is within ``margin`` of the fastest — a flip must have
-    timing evidence beyond run-to-run noise."""
+    whenever it is within the noise margin of the fastest — a flip must
+    have timing evidence beyond run-to-run noise.
+
+    ``spreads`` (algorithm -> ``us_rel_spread`` from the same timed
+    iterations, DESIGN.md §10) widens the margin to the observed jitter
+    of the two candidates being compared: the 5%% convention is the
+    *floor*, and on a host whose medians wobble 30%% run-to-run a 30%%
+    "win" is not evidence.  Without spread data the floor applies
+    unchanged (pre-v2 reports, calibration cell medians)."""
     best = min(times, key=lambda a: times[a])
-    if analytic in times and times[analytic] <= times[best] * (1 + margin):
+    if analytic not in times:
+        return best
+    eff = margin
+    for alg in (analytic, best):
+        sp = (spreads or {}).get(alg)
+        if sp is not None:
+            eff = max(eff, min(float(sp), 1.0))
+    if times[analytic] <= times[best] * (1 + eff):
         return analytic
     return best
 
@@ -389,11 +410,55 @@ def eligible_candidates(spec: ConvSpec) -> Tuple[str, ...]:
     return tuple(algs)
 
 
-def measure_candidates(spec: ConvSpec, dtype: str = "float32",
-                       candidates: Optional[Sequence[str]] = None,
-                       iters: int = 3, warmup: int = 1,
-                       interpret: Optional[bool] = None,
-                       precision=None) -> Dict[str, float]:
+@dataclasses.dataclass
+class MeasuredCandidates:
+    """Everything one measured sweep learned: per-candidate steady-state
+    timings + full iteration stats, and — the part that used to vanish
+    silently — every candidate that could not be timed, with the reason
+    (same surfacing stance as ``PlanCache.io_errors``)."""
+
+    times: Dict[str, float]            # alg -> us_median (timeable only)
+    stats: Dict[str, Dict]             # alg -> full time_compiled stats
+    skipped: Dict[str, str]            # alg -> why it was not timed
+
+
+def _time_trial(trial: ConvPlan, inp, ker, iters: int, warmup: int,
+                interpret: Optional[bool]) -> Dict:
+    """AOT-compile one trial plan and run the harness timing protocol."""
+    import jax
+    from repro.bench.harness import time_compiled
+    from repro.core.conv_api import conv2d
+    spec = trial.spec
+    fn = jax.jit(lambda i, k, _p=trial: conv2d(
+        i, k, stride=(spec.s_h, spec.s_w), plan=_p, interpret=interpret))
+    compiled = fn.lower(inp, ker).compile()
+    return time_compiled(lambda: compiled(inp, ker),
+                         iters=iters, warmup=warmup)
+
+
+def _record_time_trials(spec: ConvSpec, dtype: str, trials) -> None:
+    """Fold measured trials into the calibration store (DESIGN.md §10).
+
+    Strictly best-effort: the store already degrades silently on disk
+    trouble, and a calibration failure must never fail a measurement.
+    """
+    try:
+        from repro.plan.calibrate import CalibrationStore
+        store = CalibrationStore()
+        for alg, solution, w_blk, us in trials:
+            store.add_time(spec, dtype, alg, us,
+                           solution=solution, w_blk=w_blk)
+        store.flush()
+    except Exception:
+        pass
+
+
+def measure_candidates_detailed(
+        spec: ConvSpec, dtype: str = "float32",
+        candidates: Optional[Sequence[str]] = None,
+        iters: int = 3, warmup: int = 1,
+        interpret: Optional[bool] = None,
+        precision=None, record: bool = True) -> MeasuredCandidates:
     """Steady-state ``us_per_call`` per candidate algorithm, via the
     bench harness protocol (AOT compile -> warmup -> median of timed
     calls).  This IS the measured policy's inner loop; the autotune
@@ -403,16 +468,25 @@ def measure_candidates(spec: ConvSpec, dtype: str = "float32",
     measurement exercises exactly what the winning plan will later run
     (resolved solution, planner-derived w_blk, named precision), and
     the planner's w_blk derivation stays on the warning-free path.
+
+    Candidates that cannot be timed — the Pallas geometry checker
+    rejects the trial plan, or compilation/execution raises — are never
+    dropped silently: each lands in ``.skipped`` with its reason (and a
+    warning), so the autotune report can show exactly what the race was
+    missing.  With ``record=True`` every successful trial is added to
+    the calibration store.
     """
+    import warnings
+
     import jax
-    from repro.bench.harness import make_arrays, time_compiled
-    from repro.core.conv_api import conv2d
+    from repro.bench.harness import make_arrays
     candidates = tuple(candidates) if candidates else \
         eligible_candidates(spec)
     dtype = _dtype_name(dtype)
     precision_name = _precision_name(precision)
     inp, ker = make_arrays(spec, dtype)
-    out: Dict[str, float] = {}
+    out = MeasuredCandidates(times={}, stats={}, skipped={})
+    recorded = []
     for alg in candidates:
         trial = ConvPlan(
             spec=spec, dtype=dtype, algorithm=alg,
@@ -426,19 +500,173 @@ def measure_candidates(spec: ConvSpec, dtype: str = "float32",
             from repro.analysis.pallas_check import check_plan
             verdict = check_plan(trial)
             if not verdict.ok:
-                import warnings
-                warnings.warn(
-                    f"measured planning skips {alg}: "
-                    + verdict.render().replace("\n", "; "))
+                reason = "pallas_check: " + \
+                    verdict.render().replace("\n", "; ")
+                out.skipped[alg] = reason
+                warnings.warn(f"measured planning skips {alg}: {reason}")
                 continue
-        fn = jax.jit(lambda i, k, _p=trial: conv2d(
-            i, k, stride=(spec.s_h, spec.s_w), plan=_p,
-            interpret=interpret))
-        compiled = fn.lower(inp, ker).compile()
-        timing = time_compiled(lambda: compiled(inp, ker),
-                               iters=iters, warmup=warmup)
-        out[alg] = timing["us_median"]
+        try:
+            timing = _time_trial(trial, inp, ker, iters, warmup, interpret)
+        except Exception as e:
+            # A candidate that fails to compile or run must not crash
+            # the race — but it must be *counted*, not silently absent.
+            reason = f"{type(e).__name__}: {e}"[:300]
+            out.skipped[alg] = reason
+            warnings.warn(f"measured planning skips {alg}: {reason}")
+            continue
+        out.times[alg] = timing["us_median"]
+        out.stats[alg] = dict(timing, solution=trial.solution,
+                              w_blk=trial.w_blk)
+        recorded.append((alg, trial.solution, trial.w_blk,
+                         timing["us_median"]))
+    if record and recorded:
+        _record_time_trials(spec, dtype, recorded)
     return out
+
+
+def measure_candidates(spec: ConvSpec, dtype: str = "float32",
+                       candidates: Optional[Sequence[str]] = None,
+                       iters: int = 3, warmup: int = 1,
+                       interpret: Optional[bool] = None,
+                       precision=None,
+                       record: bool = True) -> Dict[str, float]:
+    """``measure_candidates_detailed`` reduced to {algorithm: us_median}
+    (the historical return shape)."""
+    return measure_candidates_detailed(
+        spec, dtype, candidates, iters=iters, warmup=warmup,
+        interpret=interpret, precision=precision, record=record).times
+
+
+def _stage2_trials(spec: ConvSpec, dtype: str, algorithm: str,
+                   precision_name: Optional[str], backend: str):
+    """The winner's knob grid for measured stage 2 (DESIGN.md §10).
+
+    mec: both §3.2 solutions (A = h-direction Solution 1, B =
+    w-direction Solution 2) — ``pick_solution``'s T=100 rule is exactly
+    the kind of paper constant the measurements should audit.  Pallas
+    variants: the planner's ``pick_w_blk`` default plus half and double
+    (clamped to [8, o_w]), each re-checked by the geometry gate.  Other
+    algorithms have no plan-level knob.  Returns (knob_name, {label:
+    trial plan}) or (None, {}).
+    """
+    if algorithm == "mec":
+        plans = {sol: ConvPlan(spec=spec, dtype=dtype, algorithm="mec",
+                               solution=sol, precision=precision_name,
+                               backend=backend)
+                 for sol in ("A", "B")}
+        return "solution", plans
+    if algorithm in _PALLAS_ALGOS:
+        from repro.analysis.pallas_check import check_plan
+        default = _pallas_w_blk(spec, algorithm)
+        grid = {default, max(8, default // 2), min(spec.o_w, default * 2)}
+        plans = {}
+        for blk in sorted(b for b in grid if 1 <= b <= spec.o_w):
+            trial = ConvPlan(spec=spec, dtype=dtype, algorithm=algorithm,
+                             w_blk=blk, precision=precision_name,
+                             backend=backend)
+            if check_plan(trial).ok:
+                plans[str(blk)] = trial
+        return "w_blk", plans
+    return None, {}
+
+
+def tune_measured(spec: ConvSpec, dtype: str = "float32",
+                  backend: Optional[str] = None, precision=None,
+                  candidates: Optional[Sequence[str]] = None,
+                  iters: int = 3, warmup: int = 1,
+                  interpret: Optional[bool] = None,
+                  record: bool = True,
+                  calibration="ambient") -> Tuple[ConvPlan, Dict]:
+    """The full measured policy: stage-1 algorithm race, then a stage-2
+    grid over the winner's knob (MEC solution / Pallas ``w_blk``), both
+    through ``pick_measured``'s noise margin so a non-default knob needs
+    evidence beyond jitter.  Every trial lands in the calibration store
+    when ``record=True``.
+
+    Returns ``(plan, detail)`` where ``plan`` is the partition-free
+    measured :class:`ConvPlan` and ``detail`` is the JSON-able evidence
+    record the autotune bench suite embeds per cell:
+    ``{analytic_algorithm, candidate_us, candidate_stats, skipped,
+    tuning}`` (``tuning`` is None when the winner has no knob).
+    """
+    import jax
+    backend = backend or jax.default_backend()
+    dtype = _dtype_name(dtype)
+    precision_name = _precision_name(precision)
+    mc = measure_candidates_detailed(
+        spec, dtype, candidates, iters=iters, warmup=warmup,
+        interpret=interpret, precision=precision_name, record=record)
+    from repro.launch.costmodel import pick_conv2d_algorithm
+    analytic = pick_conv2d_algorithm(spec, backend,
+                                     calibration=calibration)
+    if not mc.times:
+        raise ValueError(
+            f"measured planning has no timeable candidate for "
+            f"{spec_key(spec)}: skipped={mc.skipped}")
+    algorithm = pick_measured(mc.times, analytic, spreads={
+        a: s.get("us_rel_spread") for a, s in mc.stats.items()})
+    solution = pick_solution(spec) if algorithm == "mec" else "auto"
+    w_blk = _pallas_w_blk(spec, algorithm)
+
+    tuning = None
+    knob, plans = _stage2_trials(spec, dtype, algorithm,
+                                 precision_name, backend)
+    if knob is not None and plans:
+        from repro.bench.harness import make_arrays
+        inp, ker = make_arrays(spec, dtype)
+        default_label = solution if knob == "solution" else str(w_blk)
+        trial_times: Dict[str, float] = {}
+        trial_stats: Dict[str, Dict] = {}
+        recorded = []
+        for label, trial in plans.items():
+            try:
+                timing = _time_trial(trial, inp, ker, iters, warmup,
+                                     interpret)
+            except Exception as e:
+                mc.skipped[f"{algorithm}[{knob}={label}]"] = \
+                    f"{type(e).__name__}: {e}"[:300]
+                continue
+            trial_times[label] = timing["us_median"]
+            trial_stats[label] = dict(timing, solution=trial.solution,
+                                      w_blk=trial.w_blk)
+            recorded.append((algorithm, trial.solution, trial.w_blk,
+                             timing["us_median"]))
+        if record and recorded:
+            _record_time_trials(spec, dtype, recorded)
+        if trial_times:
+            # The analytic default keeps its noise-margin advantage; if
+            # it could not be timed the fastest trial wins outright.
+            # Deliberately the plain 5% floor (no spread widening):
+            # both trials run the same algorithm, so their jitter is
+            # common-mode, and the default here is a paper heuristic
+            # under audit (pick_solution's T=100, pick_w_blk) — a lower
+            # bar than overriding the calibrated costmodel.
+            picked = pick_measured(trial_times, default_label) \
+                if default_label in trial_times \
+                else min(trial_times, key=lambda k: trial_times[k])
+            if knob == "solution":
+                solution = picked
+            else:
+                w_blk = int(picked)
+            tuning = {"knob": knob, "algorithm": algorithm,
+                      "default": default_label, "picked": picked,
+                      "trials": trial_stats}
+
+    plan = ConvPlan(spec=spec, dtype=dtype, algorithm=algorithm,
+                    solution=solution, w_blk=w_blk,
+                    precision=precision_name, backend=backend,
+                    mode="measured")
+    if plan.algorithm in _PALLAS_ALGOS:
+        # Never return a Pallas plan the static checker rejects —
+        # raising here beats faulting at execute.
+        from repro.analysis.pallas_check import assert_plan
+        assert_plan(plan)
+    detail = {"analytic_algorithm": analytic,
+              "candidate_us": dict(mc.times),
+              "candidate_stats": mc.stats,
+              "skipped": mc.skipped,
+              "tuning": tuning}
+    return plan, detail
 
 
 def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
@@ -447,13 +675,23 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
                 candidates: Optional[Sequence[str]] = None,
                 iters: int = 3, warmup: int = 1,
                 interpret: Optional[bool] = None,
-                cache=None) -> ConvPlan:
+                cache=None, calibration="ambient") -> ConvPlan:
     """Produce the :class:`ConvPlan` for one post-padding ``spec``.
 
     mode: ``"analytic"`` (costmodel pick — today's ``auto`` rule),
-    ``"measured"`` (time every candidate through the bench harness and
-    keep the winner), or ``"cached"`` (process LRU -> on-disk JSON ->
-    analytic on miss; see ``repro.plan.cache``).
+    ``"measured"`` (time every candidate through the bench harness,
+    keep the winner, then tune its knob — see :func:`tune_measured`),
+    or ``"cached"`` (process LRU -> on-disk JSON -> analytic on miss;
+    see ``repro.plan.cache``).
+
+    calibration: the fitted-costmodel handle the analytic pick consults
+    (DESIGN.md §10) — ``"ambient"`` (default: $REPRO_CALIBRATION or the
+    fingerprinted store beside the plan cache, silently absent when
+    unfitted), ``None`` (force the paper's uncalibrated constants), or
+    an explicit ``repro.plan.calibrate.Calibration``.  Cached plans
+    record whatever the calibration said at *plan* time; like any
+    costmodel change, a new calibration takes effect on cache misses
+    and environment-fingerprint rollover, not retroactively.
 
     partition follows the executor's rules-aware convention: ``None``
     consults the installed ``parallel.axes`` rules (no mesh -> no
@@ -485,7 +723,8 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
         plan = plan_conv2d(spec, dtype=dtype, mode="analytic",
                            backend=backend, precision=precision_name,
                            partition=partition,
-                           partition_axis=partition_axis)
+                           partition_axis=partition_axis,
+                           calibration=calibration)
         if plan != hit:               # an agreeing recompute skips the
             cache.put(key, plan)      # disk rewrite entirely
         return plan
@@ -494,17 +733,19 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
     parts, axes = _resolve_partition(spec, partition, partition_axis,
                                      jnp.dtype(dtype).itemsize)
 
-    if mode == "analytic":
-        from repro.launch.costmodel import pick_conv2d_algorithm
-        algorithm = pick_conv2d_algorithm(spec, backend)
-    else:  # measured
-        times = measure_candidates(spec, dtype, candidates, iters=iters,
-                                   warmup=warmup, interpret=interpret,
-                                   precision=precision_name)
-        from repro.launch.costmodel import pick_conv2d_algorithm
-        analytic = pick_conv2d_algorithm(spec, backend)
-        algorithm = pick_measured(times, analytic)
+    if mode == "measured":
+        base, _detail = tune_measured(
+            spec, dtype, backend=backend, precision=precision_name,
+            candidates=candidates, iters=iters, warmup=warmup,
+            interpret=interpret, calibration=calibration)
+        # tune_measured already ran the Pallas assert; replaying it
+        # through replace() only re-runs __post_init__ validation.
+        return dataclasses.replace(base, partition=parts,
+                                   partition_axes=axes)
 
+    from repro.launch.costmodel import pick_conv2d_algorithm
+    algorithm = pick_conv2d_algorithm(spec, backend,
+                                      calibration=calibration)
     solution = pick_solution(spec) if algorithm == "mec" else "auto"
     plan = ConvPlan(spec=spec, dtype=dtype, algorithm=algorithm,
                     solution=solution,

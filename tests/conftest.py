@@ -13,6 +13,15 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("REPRO_PLAN_CACHE_DIR",
                       tempfile.mkdtemp(prefix="repro-plan-cache-"))
 
+# Pin the ambient calibration (repro.plan.calibrate) to a nonexistent
+# file: analytic picks consult the fitted costmodel by default, and a
+# measured-mode test recording trials into the session store must not
+# flip a later test's analytic expectations.  Calibration tests
+# monkeypatch REPRO_CALIBRATION to a real file.
+os.environ.setdefault(
+    "REPRO_CALIBRATION",
+    os.path.join(os.environ["REPRO_PLAN_CACHE_DIR"], "calibration-off.json"))
+
 # The container image ships no `hypothesis`; fall back to the minimal
 # deterministic stub vendored under tests/_vendor (same API subset).
 try:

@@ -103,7 +103,7 @@ def test_plan_conv2d_never_returns_rejected_pallas_plan(monkeypatch):
     monkeypatch.setattr(convplan, "_pallas_w_blk", bad_w_blk)
     monkeypatch.setattr(
         "repro.launch.costmodel.pick_conv2d_algorithm",
-        lambda spec, backend: "mec_fused")
+        lambda spec, backend, **kw: "mec_fused")
     with pytest.raises(PallasCheckError):
         convplan.plan_conv2d(SMALL, mode="analytic")
 

@@ -246,3 +246,139 @@ def test_committed_dist_baseline_is_valid():
     # channel + 2 spatial x channel analytic cells, and (3 smoke2 +
     # 3 smoke4) x 2 algorithms
     assert len(doc["results"]) == 12 * 3 + 12 + 3 + 2 + (3 + 3) * 2
+
+
+# ------------------------------------------------------------- autotune
+
+def _autotune_doc():
+    """Minimal schema-v2 autotune document (one smoke cell)."""
+    spec = ConvSpec(1, 14, 14, 4, 3, 3, 8, 1, 1)
+    import dataclasses
+    return {
+        "autotune_schema_version": 2,
+        "suite": "autotune",
+        "base_suite": "smoke",
+        "environment": {"backend": "cpu", "jax": "0"},
+        "calibration": {"active": False, "source": None},
+        "harness": {"iters": 3, "warmup": 1, "noise_margin": 0.05},
+        "results": [{
+            "scenario": "s3x3",
+            "dtype": "float32",
+            "run_spec": dataclasses.asdict(spec),
+            "analytic_algorithm": "mec",
+            "analytic_us": 230.0,
+            "measured_algorithm": "mec",
+            "measured_us": 230.0,
+            "candidate_us": {"mec": 230.0, "direct": 410.0},
+            "candidate_stats": {"mec": {"us_median": 230.0,
+                                        "us_std": 4.0,
+                                        "us_rel_spread": 0.017}},
+            "skipped": {},
+            "n_skipped": 0,
+            "max_rel_spread": 0.017,
+            "tuning": None,
+            "pick_agrees": True,
+        }],
+    }
+
+
+def test_autotune_check_gates_decision_fields_exactly():
+    base = _autotune_doc()
+    failures, _ = compare(copy.deepcopy(base), base)
+    assert failures == []
+    drift = copy.deepcopy(base)
+    drift["results"][0]["analytic_algorithm"] = "direct"
+    failures, _ = compare(drift, base)
+    assert any("analytic_algorithm" in f for f in failures)
+    missing = copy.deepcopy(base)
+    missing["results"] = [dict(missing["results"][0], scenario="other")]
+    failures, _ = compare(missing, base)
+    assert any("missing" in f for f in failures)
+
+
+def test_autotune_check_spread_and_measured_drift_never_fail():
+    base = _autotune_doc()
+    drift = copy.deepcopy(base)
+    drift["results"][0].update(measured_algorithm="direct",
+                               pick_agrees=False, max_rel_spread=0.4)
+    drift["results"][0]["candidate_stats"]["mec"]["us_std"] = 90.0
+    failures, notes = compare(drift, base)
+    assert failures == []
+    assert any("measured_algorithm" in n for n in notes)
+    assert any("max_rel_spread" in n for n in notes)
+    # timing stays under the tolerance policy, not exactness
+    slow = copy.deepcopy(base)
+    slow["results"][0]["measured_us"] = 230.0 * 2.5
+    failures, _ = compare(slow, base, timing_rtol=1.0)
+    assert any("measured_us regressed" in f for f in failures)
+    failures, _ = compare(slow, base, schema_only_on_timing=True)
+    assert failures == []
+
+
+def test_autotune_check_newly_skipped_candidate_fails():
+    base = _autotune_doc()
+    lost = copy.deepcopy(base)
+    lost["results"][0]["skipped"] = {"fft": "XlaRuntimeError: boom"}
+    lost["results"][0]["n_skipped"] = 1
+    failures, _ = compare(lost, base)
+    assert any("newly skipped" in f for f in failures)
+    # an already-skipped candidate staying skipped is not a regression
+    failures, _ = compare(copy.deepcopy(lost), lost)
+    assert failures == []
+
+
+def test_autotune_check_calibration_flip_is_not_a_failure():
+    base = _autotune_doc()
+    calibrated = copy.deepcopy(base)
+    calibrated["calibration"] = {"active": True, "source": "env:x"}
+    calibrated["results"][0]["analytic_algorithm"] = "direct"
+    failures, notes = compare(calibrated, base)
+    assert failures == []
+    assert any("calibration active differs" in n for n in notes)
+
+
+def test_time_compiled_reports_spread():
+    from repro.bench.harness import time_compiled
+    t = time_compiled(lambda: None, iters=4, warmup=1)
+    assert t["us_std"] >= 0.0
+    assert t["us_rel_spread"] == pytest.approx(
+        t["us_std"] / t["us_median"])
+
+
+def test_committed_autotune_baseline_checks_against_itself():
+    doc = json.loads((REPO / "BENCH_autotune.json").read_text())
+    assert doc["autotune_schema_version"] == 2
+    failures, _ = compare(copy.deepcopy(doc), doc,
+                          schema_only_on_timing=True)
+    assert failures == []
+    for rec in doc["results"]:
+        assert "candidate_stats" in rec and "skipped" in rec
+        assert rec["n_skipped"] == len(rec["skipped"])
+
+
+def test_smoke_w520_is_a_kernel_tuning_cell():
+    # The w520 geometry exists to audit pick_w_blk's 512-column cap:
+    # its o_w must exceed the planner default so the stage-2 grid has a
+    # strictly larger (single-grid-step) block to find.
+    from repro.kernels.ops import pick_w_blk
+    sc = {s.name: s for s in resolve_suite("smoke")}["w520"]
+    assert sc.tune_candidates == ("mec_lowered", "mec_fused", "mec_fused2")
+    assert set(sc.algorithms) == set(sc.tune_candidates)
+    default = pick_w_blk(sc.run_spec.o_w, sc.run_spec.k_c, _warn_env=False)
+    assert default < sc.run_spec.o_w
+
+
+def test_committed_autotune_baseline_tunes_w_blk_off_default():
+    # DESIGN.md §10 acceptance: measured mode demonstrably tunes the
+    # knob — the committed report's w520 cell must carry a non-default
+    # w_blk backed by before/after trial timings.
+    doc = json.loads((REPO / "BENCH_autotune.json").read_text())
+    rec = {r["scenario"]: r for r in doc["results"]}["w520"]
+    tuning = rec["tuning"]
+    assert tuning["knob"] == "w_blk"
+    assert tuning["picked"] != tuning["default"]
+    assert rec["plan"]["w_blk"] == int(tuning["picked"])
+    trials = tuning["trials"]
+    assert tuning["default"] in trials and tuning["picked"] in trials
+    assert trials[tuning["picked"]]["us_median"] < \
+        trials[tuning["default"]]["us_median"]

@@ -1,0 +1,326 @@
+"""Fitted-costmodel calibration (repro.plan.calibrate, DESIGN.md §10).
+
+Covers the store round-trip + PlanCache-style silent degradation, the
+fit math (cell medians, memory geomeans, lstsq constants), the
+cell-evidence pick flip with its noise margin, ambient resolution via
+$REPRO_CALIBRATION, the calibrate CLI (--fit / --check / --report), and
+the committed baseline's headline claim: s5x5 flips to ``direct``.
+"""
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.core.convspec import ConvSpec
+from repro.launch.costmodel import (conv2d_algorithm_costs,
+                                    pick_conv2d_algorithm)
+from repro.plan.calibrate import (CALIBRATION_ENV, Calibration,
+                                  CalibrationStore, calibration_info,
+                                  calibration_path, check_calibration,
+                                  calibrate_main, current_calibration,
+                                  ingest_autotune, ingest_memaudit,
+                                  parse_spec_key, render_report,
+                                  reset_calibration_cache,
+                                  resolve_calibration)
+from repro.plan.convplan import spec_key
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# The smoke s5x5 cell: analytic Eq. 2-3 says mec, the committed autotune
+# timings say direct wins 2.1x.
+S5X5 = ConvSpec(1, 16, 16, 3, 5, 5, 8, 2, 2)
+
+
+@pytest.fixture
+def fresh_store(tmp_path, monkeypatch):
+    """Isolated store dir + no ambient-file override."""
+    monkeypatch.setenv("REPRO_PLAN_CACHE_DIR", str(tmp_path))
+    monkeypatch.delenv(CALIBRATION_ENV, raising=False)
+    reset_calibration_cache()
+    yield tmp_path
+    reset_calibration_cache()
+
+
+def _evidence(spec=S5X5, mec_us=453.0, direct_us=212.0):
+    calib = Calibration.for_current_env()
+    calib.add_time(spec, "float32", "mec", mec_us, solution="A")
+    calib.add_time(spec, "float32", "direct", direct_us)
+    return calib
+
+
+# ------------------------------------------------------------------- keys
+
+def test_parse_spec_key_roundtrips():
+    for spec in (S5X5, ConvSpec(2, 7, 9, 3, 3, 2, 5, 1, 2)):
+        assert parse_spec_key(spec_key(spec)) == spec
+
+
+# ------------------------------------------------------------------ store
+
+def test_store_flush_load_roundtrip(fresh_store):
+    store = CalibrationStore()
+    store.add_time(S5X5, "float32", "mec", 453.0, solution="A")
+    store.add_memory(S5X5, "float32", "mec", 1.39)
+    store.flush()
+    assert store.io_errors == 0
+    assert calibration_path().exists()
+    disk = CalibrationStore().load()
+    assert disk.cell_times(S5X5)["mec"] == 453.0
+    assert disk.mem_ratio_for("mec") == pytest.approx(1.39)
+    # flush merges rather than clobbers: a second writer's samples append
+    other = CalibrationStore()
+    other.add_time(S5X5, "float32", "direct", 212.0)
+    other.flush()
+    merged = CalibrationStore().load()
+    assert set(merged.cell_times(S5X5)) == {"mec", "direct"}
+
+
+def test_store_corrupt_file_degrades_and_counts(fresh_store):
+    calibration_path().parent.mkdir(parents=True, exist_ok=True)
+    calibration_path().write_text("{not json")
+    store = CalibrationStore()
+    assert store.load().is_empty()
+    assert store.io_errors == 1
+    assert current_calibration() is None      # ambient degrades silently
+
+
+def test_store_fingerprint_mismatch_is_invalidation(fresh_store):
+    calib = _evidence()
+    doc = calib.to_dict(with_fit=False)
+    doc["fingerprint"] = "0" * 16
+    calibration_path().parent.mkdir(parents=True, exist_ok=True)
+    calibration_path().write_text(json.dumps(doc))
+    store = CalibrationStore()
+    assert store.load().is_empty()            # stale env: ignored...
+    assert store.io_errors == 0               # ...but not an I/O error
+    assert current_calibration() is None
+
+
+def test_sample_cap_bounds_the_file(fresh_store):
+    from repro.plan.calibrate import MAX_SAMPLES_PER_KEY
+    calib = Calibration.for_current_env()
+    for i in range(3 * MAX_SAMPLES_PER_KEY):
+        calib.add_time(S5X5, "float32", "mec", float(i))
+    (key,) = calib.time_samples
+    assert len(calib.time_samples[key]) == MAX_SAMPLES_PER_KEY
+
+
+# -------------------------------------------------------------------- fit
+
+def test_time_cells_take_min_over_variants_of_medians():
+    calib = Calibration.for_current_env()
+    for us in (100.0, 120.0, 110.0):          # median 110
+        calib.add_time(S5X5, "float32", "mec", us, solution="A")
+    calib.add_time(S5X5, "float32", "mec", 90.0, solution="B")
+    assert calib.cell_times(S5X5)["mec"] == 90.0
+
+
+def test_mem_ratios_geomean_and_default():
+    calib = Calibration.for_current_env()
+    calib.add_memory(S5X5, "float32", "mec", 1.0)
+    calib.add_memory(S5X5, "float32", "mec", 4.0)
+    assert calib.mem_ratio_for("mec") == pytest.approx(2.0)
+    assert calib.mem_ratio_for("im2col") == 1.0   # unfitted: paper constant
+
+
+def test_time_constants_recover_a_planted_linear_model():
+    calib = Calibration.for_current_env()
+    from repro.plan.calibrate import _features
+    specs = [ConvSpec(1, h, h, 3, 3, 3, 8, 1, 1) for h in (8, 12, 16, 24)]
+    for spec in specs:
+        flops, overhead = _features(spec, "mec")
+        calib.add_time(spec, "float32", "mec",
+                       5.0 + 2e-6 * flops + 3e-5 * overhead)
+    c = calib.time_constants()["mec"]
+    assert c["n"] == len(specs)
+    assert c["c0"] == pytest.approx(5.0, rel=1e-3)
+    assert c["c_flops"] == pytest.approx(2e-6, rel=1e-3)
+    assert c["c_overhead"] == pytest.approx(3e-5, rel=1e-3)
+    est = calib.time_estimate(specs[0], "mec")
+    assert est == pytest.approx(calib.cell_times(specs[0])["mec"], rel=1e-3)
+    assert calib.time_estimate(specs[0], "fft") is None
+
+
+# ------------------------------------------------------------------ picks
+
+def test_cell_evidence_flips_the_analytic_pick():
+    assert pick_conv2d_algorithm(S5X5, "cpu", calibration=None) == "mec"
+    calib = _evidence()
+    assert pick_conv2d_algorithm(S5X5, "cpu", calibration=calib) == "direct"
+    d = calib.decisions()[spec_key(S5X5)]
+    assert d == {"uncalibrated": "mec", "calibrated": "direct"}
+
+
+def test_sub_margin_evidence_keeps_the_paper_rule():
+    # a 1% "win" for direct is timer jitter: the analytic pick holds
+    calib = _evidence(mec_us=101.0, direct_us=100.0)
+    assert pick_conv2d_algorithm(S5X5, "cpu", calibration=calib) == "mec"
+
+
+def test_no_evidence_cells_keep_the_paper_rule():
+    calib = _evidence()
+    other = ConvSpec(1, 14, 14, 4, 3, 3, 8, 1, 1)    # no samples
+    assert pick_conv2d_algorithm(other, "cpu", calibration=calib) == \
+        pick_conv2d_algorithm(other, "cpu", calibration=None)
+    # evidence on the analytic pick alone (no rival) cannot flip either
+    solo = Calibration.for_current_env()
+    solo.add_time(S5X5, "float32", "mec", 453.0)
+    assert pick_conv2d_algorithm(S5X5, "cpu", calibration=solo) == "mec"
+
+
+def test_calibration_never_crosses_backends():
+    calib = _evidence()
+    assert calib.backend == "cpu"
+    assert resolve_calibration(calib, "tpu") is None
+    assert pick_conv2d_algorithm(S5X5, "tpu", calibration=calib) \
+        == pick_conv2d_algorithm(S5X5, "tpu", calibration=None)
+
+
+def test_costmodel_carries_calibrated_columns():
+    calib = _evidence()
+    calib.add_memory(S5X5, "float32", "mec", 1.39)
+    costs = conv2d_algorithm_costs(S5X5, calibration=calib)
+    mec = costs["mec"]
+    assert mec["calibrated_overhead_elems"] == \
+        pytest.approx(mec["overhead_elems"] * 1.39)
+    assert mec["measured_us"] == pytest.approx(453.0)
+    # im2col unfitted: ratio 1.0, no measurement
+    assert costs["im2col"]["calibrated_overhead_elems"] == \
+        costs["im2col"]["overhead_elems"]
+    assert costs["im2col"]["measured_us"] is None
+    # uncalibrated call shape is unchanged (no surprise columns)
+    assert "calibrated_overhead_elems" not in \
+        conv2d_algorithm_costs(S5X5)["mec"]
+
+
+# ---------------------------------------------------------------- ambient
+
+def test_ambient_env_file_and_info(fresh_store, tmp_path, monkeypatch):
+    path = tmp_path / "committed.json"
+    path.write_text(json.dumps(_evidence().to_dict()))
+    monkeypatch.setenv(CALIBRATION_ENV, str(path))
+    reset_calibration_cache()
+    ambient = current_calibration()
+    assert ambient is not None and ambient.cell_times(S5X5)
+    # "ambient" is the planner default: the flip flows through
+    assert pick_conv2d_algorithm(S5X5, "cpu") == "direct"
+    info = calibration_info()
+    assert info["active"] and info["source"] == f"env:{path}"
+    assert info["cells"] == 1
+    # a backend-mismatched committed file never applies
+    doc = _evidence().to_dict()
+    doc["backend"] = "tpu"
+    path.write_text(json.dumps(doc))
+    reset_calibration_cache()
+    assert current_calibration() is None
+    assert calibration_info()["active"] is False
+
+
+def test_conftest_pins_ambient_off_by_default(fresh_store):
+    # With no env override and an empty store dir the planner is
+    # uncalibrated — the hermeticity every analytic test relies on.
+    assert current_calibration() is None
+    assert pick_conv2d_algorithm(S5X5, "cpu") == "mec"
+
+
+# -------------------------------------------------------------------- CLI
+
+def _report_docs(tmp_path):
+    autotune = {"results": [{
+        "scenario": "s5x5", "dtype": "float32",
+        "run_spec": dataclasses.asdict(S5X5),
+        "candidate_us": {"mec": 453.0, "direct": 212.0},
+        "candidate_stats": {"mec": {"solution": "A", "w_blk": None}},
+        "tuning": {"knob": "solution", "algorithm": "mec", "default": "A",
+                   "picked": "B",
+                   "trials": {"A": {"us_median": 453.0},
+                              "B": {"us_median": 440.0}}},
+    }]}
+    memaudit = {"results": [
+        {"policy": "gated", "ratio": 1.39, "algorithm": "mecA",
+         "dtype": "float32", "spec": dataclasses.asdict(S5X5)},
+        {"policy": "recorded", "ratio": 9.0, "algorithm": "mec_fused",
+         "dtype": "float32", "spec": dataclasses.asdict(S5X5)},
+    ]}
+    at, ma = tmp_path / "at.json", tmp_path / "ma.json"
+    at.write_text(json.dumps(autotune))
+    ma.write_text(json.dumps(memaudit))
+    return at, ma
+
+
+def test_ingest_reports_and_recorded_cells_never_train():
+    calib = Calibration.for_current_env()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        at, ma = _report_docs(pathlib.Path(d))
+        assert ingest_autotune(calib, json.loads(at.read_text())) == 4
+        assert ingest_memaudit(calib, json.loads(ma.read_text())) == 1
+    assert calib.cell_times(S5X5) == {"mec": 440.0, "direct": 212.0}
+    assert calib.mem_ratio_for("mec") == pytest.approx(1.39)
+    assert calib.mem_ratio_for("mec_fused") == 1.0   # recorded-only: unfit
+
+
+def test_cli_fit_check_report_cycle(fresh_store, tmp_path, capsys):
+    at, ma = _report_docs(tmp_path)
+    out = tmp_path / "calibration.json"
+    assert calibrate_main(["--fit", "--autotune", str(at),
+                           "--memaudit", str(ma), "--out", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["fitted"]["decisions"][spec_key(S5X5)] == \
+        {"uncalibrated": "mec", "calibrated": "direct"}
+    assert calibrate_main(["--check", "--baseline", str(out)]) == 0
+    assert calibrate_main(["--report", "--baseline", str(out)]) == 0
+    text = capsys.readouterr().out
+    assert "<-- flip" in text and "calibrated=direct" in text
+
+
+def test_cli_check_catches_tampered_fit(fresh_store, tmp_path):
+    at, ma = _report_docs(tmp_path)
+    out = tmp_path / "calibration.json"
+    calibrate_main(["--fit", "--autotune", str(at), "--memaudit", str(ma),
+                    "--out", str(out)])
+    doc = json.loads(out.read_text())
+    doc["fitted"]["decisions"][spec_key(S5X5)]["calibrated"] = "mec"
+    out.write_text(json.dumps(doc))
+    assert calibrate_main(["--check", "--baseline", str(out)]) == 1
+    # a coefficient nudge outside rtol also fails
+    doc = json.loads(out.read_text())
+    doc["fitted"]["decisions"][spec_key(S5X5)]["calibrated"] = "direct"
+    doc["fitted"]["mem_ratio"]["mec"]["ratio"] *= 1.2
+    out.write_text(json.dumps(doc))
+    assert calibrate_main(["--check", "--baseline", str(out)]) == 1
+    assert calibrate_main(["--check", "--rtol", "0.5",
+                           "--baseline", str(out)]) == 0
+    assert calibrate_main(["--fit"]) == 2     # empty store: loud usage error
+    assert calibrate_main(
+        ["--check", "--baseline", str(tmp_path / "absent.json")]) == 2
+
+
+def test_check_requires_a_fitted_block():
+    doc = _evidence().to_dict(with_fit=False)
+    assert any("fitted" in f for f in check_calibration(doc))
+    assert check_calibration(_evidence().to_dict()) == []
+
+
+def test_render_report_lists_every_cell():
+    calib = _evidence()
+    text = "\n".join(render_report(calib))
+    assert spec_key(S5X5) in text
+    assert "paper=mec calibrated=direct" in text
+
+
+# ------------------------------------------------------- committed baseline
+
+def test_committed_baseline_is_self_consistent_and_flips_s5x5():
+    doc = json.loads(
+        (ROOT / "benchmarks/baselines/calibration.json").read_text())
+    assert doc["backend"] == "cpu"
+    assert check_calibration(doc) == []
+    decisions = doc["fitted"]["decisions"]
+    s5 = decisions[spec_key(S5X5)]
+    assert s5 == {"uncalibrated": "mec", "calibrated": "direct"}
+    # no other smoke cell flips: calibration refines, not rewrites
+    for cell, d in decisions.items():
+        if cell != spec_key(S5X5):
+            assert d["uncalibrated"] == d["calibrated"], cell

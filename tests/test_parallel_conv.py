@@ -691,3 +691,76 @@ def test_composite_conv_multidevice_subprocess():
     assert res["cases"] == 36
     assert res["gi"] < 2e-4 and res["gk"] < 2e-4, res
     assert res["front"] < 1e-4, res
+
+
+# ----------------------------------------------------- halo edge cases
+
+def test_zero_halo_when_stride_covers_kernel():
+    # k_h == s_h: adjacent output windows tile the input exactly, so no
+    # rows cross the shard boundary (and overshoot clamps at zero).
+    assert spatial_halo_rows(3, 3) == 0
+    assert spatial_halo_rows(2, 3) == 0
+    spec = ConvSpec(1, 12, 12, 3, 3, 3, 8, 3, 3)
+    assert partition_viable(spec, "spatial", 4)
+    c = conv_partition_costs(spec, 4)["spatial"]
+    assert c["viable"]
+    assert c["halo_bytes_per_device"] == 0.0
+    assert c["comm_bytes_fwd_per_device"] == 0.0
+    # backward still psums the kernel cotangent over the spatial axis
+    assert c["comm_bytes_bwd_per_device"] == 3 * 3 * 3 * 8 * 4
+    # the local Eq. 3 overhead uses the halo-free 3-row shard
+    import dataclasses
+    from repro.core import memory
+    lspec = dataclasses.replace(spec, i_h=3)
+    assert c["per_device_overhead_elems"] == float(
+        memory.mec_overhead(lspec))
+
+
+def test_single_row_shard_halo_equals_full_local_height():
+    # i_h=4 split 4 ways with k_h=2, s_h=1: each device owns ONE input
+    # row and needs exactly one more — the halo IS the local height.
+    # Viability is the boundary case halo <= h_loc, not halo < h_loc.
+    spec = ConvSpec(2, 4, 8, 3, 2, 2, 4, 1, 1)
+    assert spatial_halo_rows(2, 1) == 1
+    assert partition_viable(spec, "spatial", 4)
+    c = conv_partition_costs(spec, 4)["spatial"]
+    assert c["viable"]
+    # every exchange ships one full local row per batch element
+    assert c["halo_bytes_per_device"] == 2 * 1 * 8 * 3 * 4
+    import dataclasses
+    from repro.core import memory
+    lspec = dataclasses.replace(spec, i_h=2)    # 1 owned + 1 halo row
+    assert c["per_device_overhead_elems"] == float(
+        memory.mec_overhead(lspec))
+    assert c["per_device_im2col_elems"] == float(
+        memory.im2col_overhead(lspec))
+    # sharper than the rows: more devices than rows can never split
+    assert not partition_viable(spec, "spatial", 8)
+    # ...and a halo exceeding the local height is rejected (k_h=3 needs
+    # 2 neighbour rows from a 1-row shard: multi-hop, not supported)
+    tall_kernel = ConvSpec(2, 4, 8, 3, 3, 3, 4, 1, 1)
+    assert not partition_viable(tall_kernel, "spatial", 4)
+
+
+def test_single_row_shard_matches_oracle():
+    # The boundary geometry above must also be numerically right.
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=4")
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.conv_api import conv2d
+        from repro.parallel.conv import sharded_conv2d
+        rng = np.random.RandomState(7)
+        inp = jnp.asarray(rng.randn(2, 4, 8, 3), jnp.float32)
+        ker = jnp.asarray(rng.randn(2, 2, 3, 4), jnp.float32)
+        ref = conv2d(inp, ker, algorithm="direct")
+        out = sharded_conv2d(inp, ker, partition="spatial")
+        print(float(jnp.max(jnp.abs(out - ref))))
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", prog], env=env, cwd=REPO,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert float(out.stdout.strip().splitlines()[-1]) < 1e-4

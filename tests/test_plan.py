@@ -468,7 +468,8 @@ def test_plan_vs_kwargs_multidevice_subprocess():
 def test_plan_cli_build_and_gate(tmp_path):
     from repro.plan.__main__ import build_plans, compare_plans, main
     doc = build_plans(["smoke"])
-    assert set(doc["plans"]) == {"smoke/s3x3", "smoke/s5x5", "smoke/s11x11"}
+    assert set(doc["plans"]) == {"smoke/s3x3", "smoke/s5x5",
+                                 "smoke/s11x11", "smoke/w520"}
     for plan in doc["plans"].values():
         assert plan["algorithm"] != "auto"
     # identical docs gate clean
@@ -503,3 +504,124 @@ def test_bench_records_plan_per_cell():
                   with_timing=False)
     assert rec["plan"]["algorithm"] == rec["auto_algorithm"]
     assert rec["plan"]["spec"] == rec["spec"]
+
+
+# ---------------------------------------------------- measured stage 2
+
+def test_tune_measured_grids_the_mec_solution(fresh_cache):
+    from repro.plan import tune_measured
+    spec = ConvSpec(1, 10, 10, 2, 3, 3, 4, 1, 1)
+    plan, detail = tune_measured(spec, candidates=("mec",),
+                                 iters=1, warmup=1, record=False,
+                                 calibration=None)
+    assert plan.algorithm == "mec" and plan.mode == "measured"
+    tuning = detail["tuning"]
+    assert tuning["knob"] == "solution" and tuning["algorithm"] == "mec"
+    assert set(tuning["trials"]) == {"A", "B"}
+    assert tuning["picked"] in ("A", "B")
+    assert plan.solution == tuning["picked"]
+    # the analytic default only loses its knob with decisive evidence
+    from repro.plan.convplan import pick_measured
+    assert tuning["picked"] == pick_measured(
+        {k: v["us_median"] for k, v in tuning["trials"].items()},
+        tuning["default"])
+    assert detail["candidate_us"].keys() == {"mec"}
+    assert detail["skipped"] == {}
+
+
+def test_tune_measured_grids_pallas_w_blk(fresh_cache):
+    from repro.plan import tune_measured
+    # o_w = 30 > default w_blk: the half/default/double grid is real
+    spec = ConvSpec(1, 8, 32, 2, 3, 3, 4, 1, 1)
+    plan, detail = tune_measured(spec, candidates=("mec_lowered",),
+                                 iters=1, warmup=1, interpret=True,
+                                 record=False, calibration=None)
+    assert plan.algorithm == "mec_lowered"
+    tuning = detail["tuning"]
+    assert tuning["knob"] == "w_blk"
+    assert len(tuning["trials"]) >= 2
+    assert str(tuning["default"]) in tuning["trials"]
+    assert plan.w_blk == int(tuning["picked"])
+
+
+def test_measured_skips_are_counted_not_dropped(fresh_cache, monkeypatch):
+    from repro.plan import convplan, measure_candidates_detailed
+
+    def boom(trial, inp, ker, iters, warmup, interpret):
+        if trial.algorithm == "mec":
+            raise RuntimeError("compile exploded")
+        return {"iters": 1, "warmup": 1, "us_median": 10.0,
+                "us_min": 10.0, "us_mean": 10.0, "us_std": 0.0,
+                "us_rel_spread": 0.0}
+
+    monkeypatch.setattr(convplan, "_time_trial", boom)
+    spec = ConvSpec(1, 8, 8, 2, 3, 3, 4, 1, 1)
+    with pytest.warns(UserWarning, match="measured planning skips mec"):
+        mc = measure_candidates_detailed(
+            spec, candidates=("direct", "mec"), record=False)
+    assert mc.times == {"direct": 10.0}
+    assert mc.skipped["mec"].startswith("RuntimeError")
+    # a Pallas candidate the geometry checker rejects is skipped the
+    # same loud way, and never timed at all
+    from repro.analysis import pallas_check
+
+    class _Reject:
+        ok = False
+
+        def render(self):
+            return "rejected: w_blk tile overruns VMEM"
+
+    monkeypatch.setattr(pallas_check, "check_plan",
+                        lambda plan: _Reject())
+    with pytest.warns(UserWarning, match="pallas_check"):
+        mc = measure_candidates_detailed(
+            spec, candidates=("mec_lowered",), record=False)
+    assert mc.times == {}
+    assert mc.skipped["mec_lowered"].startswith("pallas_check")
+
+
+def test_tune_measured_raises_when_nothing_timeable(fresh_cache,
+                                                    monkeypatch):
+    from repro.plan import convplan, tune_measured
+
+    def boom(trial, inp, ker, iters, warmup, interpret):
+        raise RuntimeError("no backend")
+
+    monkeypatch.setattr(convplan, "_time_trial", boom)
+    spec = ConvSpec(1, 8, 8, 2, 3, 3, 4, 1, 1)
+    with pytest.warns(UserWarning):
+        with pytest.raises(ValueError, match="no timeable candidate"):
+            tune_measured(spec, candidates=("direct", "mec"),
+                          record=False, calibration=None)
+
+
+def test_measured_trials_feed_the_calibration_store(fresh_cache,
+                                                    monkeypatch):
+    from repro.plan import CalibrationStore, tune_measured
+    from repro.plan.calibrate import reset_calibration_cache
+    monkeypatch.delenv("REPRO_CALIBRATION", raising=False)
+    reset_calibration_cache()
+    spec = ConvSpec(1, 10, 10, 2, 3, 3, 4, 1, 1)
+    tune_measured(spec, candidates=("direct", "mec"), iters=1, warmup=1)
+    disk = CalibrationStore().load()
+    cell = disk.cell_times(spec)
+    assert set(cell) >= {"direct", "mec"}
+    reset_calibration_cache()
+
+
+def test_pick_measured_spread_widens_the_margin():
+    from repro.plan import pick_measured
+    times = {"mec": 130.0, "im2col": 100.0}
+    # 30% gap beats the 5% floor...
+    assert pick_measured(times, "mec") == "im2col"
+    # ...but not the 40% observed jitter of the winner
+    assert pick_measured(times, "mec",
+                         spreads={"im2col": 0.4}) == "mec"
+    # the analytic candidate's own jitter counts too
+    assert pick_measured(times, "mec", spreads={"mec": 0.35}) == "mec"
+    # quiet measurements keep the floor exactly
+    assert pick_measured(times, "mec",
+                         spreads={"mec": 0.01, "im2col": 0.0}) == "im2col"
+    # absurd spreads are capped, not infinite vetoes
+    assert pick_measured({"mec": 500.0, "im2col": 100.0}, "mec",
+                         spreads={"im2col": 7.0}) == "im2col"
