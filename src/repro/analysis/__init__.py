@@ -1,29 +1,61 @@
 """repro.analysis — static verification of the repo's memory claims
-(DESIGN.md §8).  Three CI-gated suites:
+(DESIGN.md §8).  Four CI-gated suites:
 
 * :mod:`repro.analysis.memaudit` — XLA peak-temp bytes vs. the paper's
   Eq. 2-4 analytic model, for every committed baseline plan.
 * :mod:`repro.analysis.pallas_check` — symbolic grid/BlockSpec/VMEM
   checking of the Pallas kernel geometries, no compile needed.
+* :mod:`repro.analysis.shardcheck` — the distributed-conv collective
+  contract (halo permute / psum all-reduce bytes vs. the costmodel,
+  zero accidental resharding) plus the precision-flow pass over every
+  partitioned lowering.
 * :mod:`repro.analysis.lint` — AST invariants for bug classes this repo
   has already shipped (dropped kwargs, stray env reads, shard_map
-  imports bypassing the compat shim).
+  imports bypassing the compat shim, bare un-annotated GEMMs).
 
-Run all three: ``python -m repro.analysis --suite all``.
+Run all four: ``python -m repro.analysis --suite all``.
 
 Layering: analysis may import ``core``/``kernels``/``bench`` freely but
 never ``repro.plan`` at module level — the planner calls *into*
-``pallas_check`` (lazily), so plans are duck-typed here.
-"""
-from repro.analysis.lint import Finding, lint_file, lint_tree
-from repro.analysis.memaudit import TOLERANCES, audit_plan, run_audit
-from repro.analysis.pallas_check import (PallasCheckError, PlanCheck,
-                                         assert_plan, check_geometry,
-                                         check_plan)
+``pallas_check``/``shardcheck`` (lazily), so plans are duck-typed here.
 
-__all__ = [
-    "Finding", "lint_file", "lint_tree",
-    "TOLERANCES", "audit_plan", "run_audit",
-    "PallasCheckError", "PlanCheck", "assert_plan", "check_geometry",
-    "check_plan",
-]
+Exports resolve lazily (PEP 562): importing this package must not drag
+in the submodules' jax dependency chain, because the ``shardcheck`` CLI
+needs to force the host device count *after* ``import repro.analysis``
+but *before* anything initializes a jax backend.
+"""
+import importlib
+
+_EXPORTS = {
+    "Finding": "repro.analysis.lint",
+    "lint_file": "repro.analysis.lint",
+    "lint_tree": "repro.analysis.lint",
+    "TOLERANCES": "repro.analysis.memaudit",
+    "audit_plan": "repro.analysis.memaudit",
+    "run_audit": "repro.analysis.memaudit",
+    "PallasCheckError": "repro.analysis.pallas_check",
+    "PlanCheck": "repro.analysis.pallas_check",
+    "assert_plan": "repro.analysis.pallas_check",
+    "check_geometry": "repro.analysis.pallas_check",
+    "check_plan": "repro.analysis.pallas_check",
+    "ContractViolation": "repro.analysis.shardcheck",
+    "ShardCheck": "repro.analysis.shardcheck",
+    "ShardCheckError": "repro.analysis.shardcheck",
+    "assert_plan_contract": "repro.analysis.shardcheck",
+    "check_plan_contract": "repro.analysis.shardcheck",
+    "check_sharding": "repro.analysis.shardcheck",
+    "expected_collectives": "repro.analysis.shardcheck",
+    "verify_collectives": "repro.analysis.shardcheck",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

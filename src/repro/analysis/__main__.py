@@ -1,18 +1,35 @@
-"""CLI: ``python -m repro.analysis --suite memaudit|pallas|lint|all``.
+"""CLI: ``python -m repro.analysis --suite
+memaudit|pallas|lint|shardcheck|all``.
 
 Exit status is non-zero on any violation — this is what the CI
 ``static-analysis`` job runs on every push.  ``--update-lint-baseline``
 regenerates the grandfathered-findings file (use only to *shrink* it
 after fixing a finding, or to adopt a deliberate new suppression the
 baseline should own).
+
+The ``shardcheck`` suite forces a host platform with
+:data:`SHARDCHECK_FORCED_DEVICES` devices (the env must be set before
+jax initializes, so ``main`` does it up front) and writes the full
+collective-contract evidence to ``BENCH_shardcheck.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import os
 import pathlib
 import sys
 
-SUITES = ("memaudit", "pallas", "lint", "all")
+SUITES = ("memaudit", "pallas", "lint", "shardcheck", "all")
+
+# Enough forced host devices for every committed dist-baseline mesh
+# except the 256-way pod cells (those record an explicit skip — a CLI
+# that forced 256 devices would spend CI minutes compiling what the
+# slow-dryrun workflow already covers).
+SHARDCHECK_FORCED_DEVICES = 8
+
+DEFAULT_DIST = "benchmarks/baselines/dist.json"
 
 
 def _run_memaudit(args) -> int:
@@ -56,11 +73,131 @@ def _run_pallas(args) -> int:
             if not variant.ok:
                 bad += 1
                 print(f"pallas: {name} as {alg}: {variant.render()}")
+    # Tuned non-default w_blk coverage: every stage-2 grid candidate the
+    # measured autotuner actually trialed (BENCH_autotune.json) must have
+    # been geometry-admissible — incl. the committed w520 cell, whose
+    # tuned w_blk=520 exceeds pick_w_blk's 512 default cap.
+    trial_cells = 0
+    autotune = root / "BENCH_autotune.json"
+    if autotune.exists():
+        from repro.core.convspec import ConvSpec
+        doc = json.loads(autotune.read_text())
+        for r in doc.get("results", []):
+            tuning = r.get("tuning")
+            if not tuning or \
+                    tuning.get("algorithm") not in PALLAS_ALGORITHMS:
+                continue
+            spec = ConvSpec(**r["run_spec"])
+            for label, t in tuning["trials"].items():
+                res = check_geometry(spec, tuning["algorithm"],
+                                     t.get("w_blk"), r["dtype"])
+                trial_cells += 1
+                if not res.ok:
+                    bad += 1
+                    print(f"pallas: {r['scenario']} trialed w_blk={label}: "
+                          f"{res.render()}")
     if bad:
         print(f"pallas: {bad} rejected geometry(ies)")
         return 1
     print(f"pallas: {len(plans)} plan(s) + {pallas_cells} Pallas "
-          f"variant geometries accepted")
+          f"variant geometries + {trial_cells} autotune trial "
+          f"geometries accepted")
+    return 0
+
+
+def _run_shardcheck(args) -> int:
+    """Contract-check every partitioned cell of the committed baselines.
+
+    Cells come from two sources: the dist baseline (every partitioned
+    record, deduplicated by executed geometry) and any partitioned plans
+    in the plans baseline (checked under a minimal 2-way-per-axis forced
+    mesh — a plan records mesh *axes*, not sizes).  Writes the full
+    evidence report and fails on any ``fail`` verdict; skips (e.g. the
+    256-way pod cells) are recorded, never silently dropped.
+    """
+    from repro.analysis.memaudit import DEFAULT_PLANS, load_plans
+    from repro.analysis.shardcheck import check_sharding
+    from repro.bench.report import make_report, write_report
+    from repro.bench.scenarios import ALGORITHM_VARIANTS
+    from repro.core.convspec import ConvSpec
+    root = pathlib.Path(__file__).resolve().parents[3]
+    dist_path = pathlib.Path(args.dist or root / DEFAULT_DIST)
+    results = []
+    n_fail = n_skip = 0
+
+    def one(scenario, variant, spec, partition, sizes, dtype, source,
+            *, algorithm, solution="auto", precision=None):
+        # `variant` is the bench cell key (e.g. "mecB"); `algorithm` is
+        # the resolved executor algorithm it maps to (e.g. "mec").
+        nonlocal n_fail, n_skip
+        chk = check_sharding(spec, partition, sizes, dtype=dtype,
+                             algorithm=algorithm, solution=solution,
+                             precision=precision)
+        rec = dict(chk.record)
+        rec.update({
+            "scenario": scenario,
+            "algorithm": variant,
+            "dtype": dtype,
+            "spec": {f: getattr(spec, f) for f in
+                     ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c",
+                      "s_h", "s_w")},
+            "source": source,
+            "n_dev": int(math.prod(sizes)),
+        })
+        # solution/precision ride inside `directions`-level evidence
+        # already; the report schema keys the canonical fields only.
+        rec.pop("solution", None)
+        results.append(rec)
+        if chk.record["verdict"] == "fail":
+            n_fail += 1
+            print(f"shardcheck: FAIL {scenario}/{variant}:")
+            for v in chk.record["violations"]:
+                print(f"  {v}")
+        elif chk.record["verdict"] == "skipped":
+            n_skip += 1
+            print(f"shardcheck: skip {scenario}/{variant}: "
+                  f"{chk.record['skipped_reason']}")
+
+    if dist_path.exists():
+        dist = json.loads(dist_path.read_text())
+        for r in dist.get("results", []):
+            if "partition" not in r:
+                continue
+            spec = ConvSpec(**r["run_spec"])
+            kw = ALGORITHM_VARIANTS.get(r["algorithm"],
+                                        {"algorithm": r["algorithm"]})
+            one(r["scenario"], r["algorithm"], spec, r["partition"],
+                tuple(r.get("n_dev_axes") or [r["n_dev"]]), r["dtype"],
+                "dist-baseline",
+                algorithm=kw.get("algorithm", r["algorithm"]),
+                solution=kw.get("solution", "auto"))
+    else:
+        print(f"shardcheck: no dist baseline at {dist_path} "
+              f"(checking plans only)")
+    plans = load_plans(args.plans or root / DEFAULT_PLANS)
+    for name, plan in plans.items():
+        if plan.partition is None:
+            continue
+        one(name, plan.algorithm, plan.spec, plan.partition,
+            (2,) * len(plan.partition), plan.dtype, "plans-baseline",
+            algorithm=plan.algorithm, solution=plan.solution,
+            precision=plan.precision)
+    out = pathlib.Path(args.shardcheck_out or root / "BENCH_shardcheck.json")
+    if results:
+        doc = make_report("shardcheck", results,
+                          harness={"forced_devices":
+                                   SHARDCHECK_FORCED_DEVICES,
+                                   "dist_baseline": str(dist_path),
+                                   "directions": ["fwd", "grad"]})
+        write_report(doc, out)
+        print(f"shardcheck: report written to {out}")
+    verified = len(results) - n_fail - n_skip
+    if n_fail:
+        print(f"shardcheck: {n_fail} cell(s) broke the collective/"
+              f"precision contract")
+        return 1
+    print(f"shardcheck: {verified} cell(s) verified, {n_skip} skipped, "
+          f"0 contract violations")
     return 0
 
 
@@ -115,7 +252,25 @@ def main(argv=None) -> int:
     parser.add_argument("--update-lint-baseline", action="store_true",
                         help="rewrite the lint baseline from the current "
                              "tree (shrink-only workflow)")
+    parser.add_argument("--dist", default=None,
+                        help="dist baseline JSON feeding the shardcheck "
+                             "suite (default: benchmarks/baselines/"
+                             "dist.json)")
+    parser.add_argument("--shardcheck-out", default=None,
+                        help="shardcheck report path "
+                             "(default: BENCH_shardcheck.json)")
     args = parser.parse_args(argv)
+    if args.suite in ("shardcheck", "all"):
+        # Must happen before anything imports-and-initializes jax (the
+        # other suites do), or the process is stuck with one device and
+        # every multi-way cell records a skip instead of a verdict.
+        # The raw read is sanctioned: XLA_FLAGS is jax bootstrap
+        # surface, not repo configuration.
+        flags = os.environ.get("XLA_FLAGS", "")  # lint-ignore: raw-environ-read-outside-compat
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count="
+                        f"{SHARDCHECK_FORCED_DEVICES}").strip()
     rc = 0
     if args.suite in ("lint", "all"):
         rc |= _run_lint(args)
@@ -123,6 +278,8 @@ def main(argv=None) -> int:
         rc |= _run_pallas(args)
     if args.suite in ("memaudit", "all"):
         rc |= _run_memaudit(args)
+    if args.suite in ("shardcheck", "all"):
+        rc |= _run_shardcheck(args)
     return rc
 
 

@@ -28,6 +28,16 @@ class it prevents:
     its one sanctioned accessor; tuned accumulator budgets belong in a
     :class:`repro.plan.ConvPlan`.
 
+``no-bare-dot-precision``
+    A ``jnp.dot`` / ``jnp.einsum`` / ``lax.dot_general`` (any attribute
+    call named ``dot``/``einsum``/``dot_general``) inside the numeric
+    core (``src/repro/core``, ``src/repro/kernels``,
+    ``src/repro/parallel``) without an explicit ``precision=`` or
+    ``preferred_element_type=`` keyword.  A bare GEMM silently runs at
+    the backend default — the exact silent-downcast class the
+    shardcheck precision-flow pass catches after lowering; this rule
+    catches it at the call site.
+
 Suppression: append ``# lint-ignore: <rule>[, <rule>...]`` (or a bare
 ``# lint-ignore`` for every rule) to the flagged line — for the kwarg
 rule, to the ``def`` line.  Pre-existing findings are grandfathered in a
@@ -54,7 +64,14 @@ RULES = (
     "raw-environ-read-outside-compat",
     "shard-map-import-outside-compat",
     "deprecated-acc-bytes-env",
+    "no-bare-dot-precision",
 )
+
+# Directories whose GEMM call sites must pin their numerics (the rule
+# scope, not the scan scope — bench/examples glue may use defaults).
+_DOT_PRECISION_DIRS = ("src/repro/core/", "src/repro/kernels/",
+                       "src/repro/parallel/")
+_DOT_CALLEES = ("dot", "einsum", "dot_general")
 
 # Files allowed to read the environment raw: the version-compat shim and
 # the plan cache + calibration store (whose directory/file overrides ARE
@@ -244,6 +261,48 @@ def _check_shard_map_imports(tree: ast.AST, path: str,
     return out
 
 
+def _check_bare_dot_precision(tree: ast.AST, path: str,
+                              lines: Sequence[str]) -> List[Finding]:
+    rule = "no-bare-dot-precision"
+    if not any(path.startswith(d) for d in _DOT_PRECISION_DIRS):
+        return []
+    out: List[Finding] = []
+
+    def visit(node: ast.AST, scope: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                visit(child, child.name)
+                continue
+            if isinstance(child, ast.Call):
+                f = child.func
+                kws = {k.arg for k in child.keywords}
+                if isinstance(f, ast.Attribute) \
+                        and f.attr in _DOT_CALLEES \
+                        and "precision" not in kws \
+                        and "preferred_element_type" not in kws \
+                        and None not in kws \
+                        and not _suppressed(lines, child.lineno, rule):
+                    # a **kwargs splat (None in kws) may carry
+                    # precision; shardcheck's flow pass still audits
+                    # what actually lowers.
+                    base = getattr(f.value, "id",
+                                   getattr(f.value, "attr", "?"))
+                    out.append(Finding(
+                        rule=rule, path=path,
+                        symbol=f"{scope}:{base}.{f.attr}",
+                        lineno=child.lineno,
+                        message=f"{base}.{f.attr}(...) in {scope} without "
+                                f"explicit precision= or "
+                                f"preferred_element_type= — a bare GEMM "
+                                f"runs at the backend default "
+                                f"(silent-downcast class; see "
+                                f"shardcheck's precision-flow pass)"))
+            visit(child, scope)
+
+    visit(tree, "<module>")
+    return out
+
+
 def lint_file(path: pathlib.Path, rel: str) -> List[Finding]:
     source = path.read_text()
     try:
@@ -257,6 +316,7 @@ def lint_file(path: pathlib.Path, rel: str) -> List[Finding]:
     out += _check_unused_params(tree, rel, lines)
     out += _check_environ_reads(tree, rel, lines)
     out += _check_shard_map_imports(tree, rel, lines)
+    out += _check_bare_dot_precision(tree, rel, lines)
     return out
 
 

@@ -56,7 +56,7 @@ OPTIONAL_EXACT_FIELDS = ("partition", "n_dev", "n_dev_axes",
                          "per_device_overhead_elems",
                          "comm_bytes_per_device", "auto_partition",
                          "serve_mode", "shape_class", "n_classes",
-                         "n_requests")
+                         "n_requests", "shardcheck")
 
 
 def _load(path) -> Dict:

@@ -180,6 +180,35 @@ def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
         hlo = hlo_flops_bytes(compiled)
         record["hlo_flops"] = hlo["flops"]
         record["hlo_bytes"] = hlo["bytes_accessed"]
+    if mesh is not None and with_hlo:
+        # Collective-contract verdict for the executed dist cell
+        # (repro.analysis.shardcheck, DESIGN.md §8).  The gated field is
+        # the version-robust reduction — verdict, per-direction status,
+        # and the costmodel-side expected bytes — because the observed
+        # HLO byte evidence may shift with the jax/XLA version matrix
+        # while the contract still holds; the full evidence lives in
+        # BENCH_shardcheck.json (python -m repro.analysis --suite
+        # shardcheck).
+        from repro.analysis.shardcheck import check_sharding
+        chk = check_sharding(
+            sc.run_spec, sc.partition, dtype=sc.dtype,
+            algorithm=kwargs.get("algorithm", "auto"),
+            solution=kwargs.get("solution", "auto"),
+            interpret=interpret, mesh=mesh,
+            axes=tuple(mesh.axis_names)).record
+        record["shardcheck"] = {
+            "verdict": chk["verdict"],
+            "skipped_reason": chk["skipped_reason"],
+            "directions": {
+                d: ("unmodeled" if "unmodeled" in info else "verified")
+                for d, info in chk["directions"].items()},
+            "expected": {
+                d: {"required": info["expected"],
+                    "optional": info["optional"]}
+                for d, info in chk["directions"].items()
+                if "expected" in info},
+            "violations": chk["violations"],
+        }
     if with_timing:
         timing = time_compiled(lambda: compiled(inp, ker),
                                iters=iters, warmup=warmup)

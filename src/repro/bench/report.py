@@ -71,6 +71,12 @@ OPTIONAL_RESULT_FIELDS = {
     "throughput_rps": _OPT_NUM,
     "warmup_warnings": int,
     "plan_cache_io_errors": int,
+    # Collective-contract verdict for a partitioned cell
+    # (repro.analysis.shardcheck, DESIGN.md §8): the full check record —
+    # per-direction expected/observed collective bytes, precision-flow
+    # tally, verdict, rendered violations.  Exact-gated by check.py when
+    # the baseline carries it.
+    "shardcheck": dict,
 }
 
 # Fields newer than the first dist baselines: type-checked when present
@@ -81,7 +87,8 @@ OPTIONAL_RESULT_FIELDS = {
 _BLOCK_EXEMPT_FIELDS = ("n_dev_axes", "plan", "serve_mode", "shape_class",
                         "n_classes", "n_requests", "p50_us", "p99_us",
                         "first_request_us", "throughput_rps",
-                        "warmup_warnings", "plan_cache_io_errors")
+                        "warmup_warnings", "plan_cache_io_errors",
+                        "shardcheck")
 
 # Suite "memaudit" (repro.analysis.memaudit, DESIGN.md §8): one record
 # per audited (scenario, algorithm) cell — XLA's measured temp bytes vs.
@@ -106,9 +113,32 @@ MEMAUDIT_RESULT_FIELDS = {
     "verdict": str,
 }
 
+# Suite "shardcheck" (repro.analysis.shardcheck, DESIGN.md §8): one
+# record per partitioned (scenario, algorithm) cell of the committed
+# dist/plans baselines — the collective contract (expected vs observed
+# per-collective bytes, both VJP directions) plus the precision-flow
+# tally.  verdict is "pass"/"fail"/"skipped"; skipped cells say why
+# (e.g. the baseline mesh needs more devices than the checker forces).
+SHARDCHECK_RESULT_FIELDS = {
+    "scenario": str,
+    "algorithm": str,
+    "dtype": str,
+    "spec": dict,
+    "source": str,
+    "partition": str,
+    "n_dev": int,
+    "n_dev_axes": list,
+    "directions": dict,
+    "precision_flow": (dict, type(None)),
+    "verdict": str,
+    "skipped_reason": (str, type(None)),
+    "violations": list,
+}
+
 # suite name -> required per-record fields; unknown suites use the
 # default timing schema above.
-RESULT_FIELDS_BY_SUITE = {"memaudit": MEMAUDIT_RESULT_FIELDS}
+RESULT_FIELDS_BY_SUITE = {"memaudit": MEMAUDIT_RESULT_FIELDS,
+                          "shardcheck": SHARDCHECK_RESULT_FIELDS}
 
 SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
 
@@ -183,16 +213,21 @@ def validate_report(doc: Dict) -> List[str]:
                     or isinstance(rec[field], bool):
                 errs.append(f"{where}.{field} has type "
                             f"{type(rec[field]).__name__}")
-        for field, types in OPTIONAL_RESULT_FIELDS.items():
-            if field in rec and (not isinstance(rec[field], types)
-                                 or isinstance(rec[field], bool)):
-                errs.append(f"{where}.{field} has type "
-                            f"{type(rec[field]).__name__}")
-        if "partition" in rec:
-            missing = [f for f in OPTIONAL_RESULT_FIELDS
-                       if f not in rec and f not in _BLOCK_EXEMPT_FIELDS]
-            if missing:
-                errs.append(f"{where}: distributed cell missing {missing}")
+        if fields is RESULT_FIELDS:
+            # The optional-field types and the dist-block rule are about
+            # the default timing schema; suites with their own schema
+            # (memaudit, shardcheck) define field semantics above.
+            for field, types in OPTIONAL_RESULT_FIELDS.items():
+                if field in rec and (not isinstance(rec[field], types)
+                                     or isinstance(rec[field], bool)):
+                    errs.append(f"{where}.{field} has type "
+                                f"{type(rec[field]).__name__}")
+            if "partition" in rec:
+                missing = [f for f in OPTIONAL_RESULT_FIELDS
+                           if f not in rec and f not in _BLOCK_EXEMPT_FIELDS]
+                if missing:
+                    errs.append(f"{where}: distributed cell missing "
+                                f"{missing}")
         if "serve_mode" in rec:
             missing = [f for f in ("shape_class", "n_classes", "n_requests",
                                    "warmup_warnings",

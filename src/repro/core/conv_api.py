@@ -161,8 +161,11 @@ def _mec_weight_grad(inp: jnp.ndarray, g: jnp.ndarray, s_h: int, s_w: int,
     return jnp.stack(rows, axis=0)        # (k_h, k_w, i_c, k_c)
 
 
-def _mec_bwd(s_h, s_w, variant, solution, interpret, precision, w_blk,
+def _mec_bwd(s_h, s_w, _variant, _solution, _interpret, precision, _w_blk,
              res, g):
+    # The nondiff args arrive positionally; variant/solution/interpret/
+    # w_blk shape the forward lowering only — the VJP math is identical
+    # for every MEC execution path.
     inp, kernel = res
     d_inp = _mec_input_grad(g, kernel, s_h, s_w, inp.shape[1], inp.shape[2],
                             precision)

@@ -180,7 +180,8 @@ def mec_conv1d_shift(inp: jnp.ndarray, kernel: jnp.ndarray,
 
 
 def mec_conv1d_depthwise(inp: jnp.ndarray, kernel: jnp.ndarray,
-                         causal: bool = True) -> jnp.ndarray:
+                         causal: bool = True,
+                         precision=None) -> jnp.ndarray:
     """Depthwise causal conv1d via the MEC column-strip lowering.
 
     inp: (n, t, c); kernel: (k_w, c).  In 1-D the compact L coincides with
@@ -196,4 +197,4 @@ def mec_conv1d_depthwise(inp: jnp.ndarray, kernel: jnp.ndarray,
         inp = jnp.pad(inp, ((0, 0), (k_w - 1, 0), (0, 0)))
     idx = jnp.arange(t)[:, None] + jnp.arange(k_w)[None, :]
     low = inp[:, idx, :]  # (n, t, k_w, c)
-    return jnp.einsum("ntkc,kc->ntc", low, kernel)
+    return jnp.einsum("ntkc,kc->ntc", low, kernel, precision=precision)

@@ -16,6 +16,7 @@ benchmarks/roofline.py and EXPERIMENTS.md read from there.
 import argparse
 import dataclasses
 import json
+import math
 import pathlib
 import time
 import traceback
@@ -71,7 +72,7 @@ def batch_shardings(mesh, rules, batch_specs):
     b_ax = rules.rules.get("batch")
     sizes = dict(mesh.shape)
 
-    def one(path, leaf):
+    def one(_path, leaf):
         spec = [None] * len(leaf.shape)
         if len(leaf.shape) >= 1 and b_ax is not None:
             axes = (b_ax,) if isinstance(b_ax, str) else tuple(b_ax)
@@ -209,9 +210,12 @@ def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
                   algorithm: str = "mec"):
     """Lower + compile one sharded_conv2d train-style cell (fwd + grad)
     on the production mesh and record memory / collective analysis.
-    Cells with a spatial component must show their halo as
-    collective-permute bytes in the compiled HLO — asserted here so a
-    silent loss of the halo exchange fails the dry-run."""
+    The compiled collectives are verified against the full shardcheck
+    contract (repro.analysis.shardcheck, DESIGN.md §8) — halo permute
+    and backward-psum bytes must match the costmodel exactly, and no
+    unpriced reshard collective may appear — so a silent loss of the
+    halo exchange (or any GSPMD reshard regression) fails the dry-run
+    with the breach spelled out, not just a bare `> 0` check."""
     cell = CONV_CELLS[name]
     spec, partition = cell["spec"], cell["partition"]
     parts = normalize_partition(partition)
@@ -234,11 +238,18 @@ def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
                              rules=rules)
         return jnp.sum(out * out)
 
+    x_sh = NamedSharding(mesh, x_spec)
+    k_sh = NamedSharding(mesh, k_spec)
     t0 = time.time()
     with mesh:
+        # Gradients pinned to the input shardings (the shard_map
+        # transpose already produces them that way) and the scalar loss
+        # replicated: left free, GSPMD reshards the gradient outputs and
+        # the extra traffic would (rightly) fail the contract below.
         fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)),
-                     in_shardings=(NamedSharding(mesh, x_spec),
-                                   NamedSharding(mesh, k_spec)))
+                     in_shardings=(x_sh, k_sh),
+                     out_shardings=(NamedSharding(mesh, P()),
+                                    (x_sh, k_sh)))
         lowered = fn.lower(x, k)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -249,10 +260,36 @@ def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
     coll = collective_bytes(compiled.as_text())
     analytic = conv_partition_costs(spec, n_dev)[
         parts if len(parts) > 1 else parts[0]]
-    if "spatial" in parts:
-        assert coll.get("collective-permute", 0) > 0, (
-            f"{name}: spatial partition compiled without collective-permute "
-            f"halo traffic (collectives: {coll})")
+    # The dry-run program is value_and_grad, i.e. shardcheck's 'grad'
+    # direction: forward halo + transposed cotangent on the permute,
+    # every backward psum on the all-reduce.
+    from repro.analysis.shardcheck import (expected_collectives,
+                                           verify_collectives)
+    # The production mesh is larger than the partition: the unused axes
+    # replicate the cell, and GSPMD may shard the backward over them
+    # (expected_collectives prices that combine as optional traffic).
+    replicated = int(mesh.devices.size) // math.prod(n_axes)
+    required, optional, unmodeled = expected_collectives(
+        spec, parts, n_axes, 4, "grad", replicated_ways=replicated)
+    if unmodeled is not None:
+        violations = []
+        shardcheck = {"verdict": "skipped", "skipped_reason": unmodeled}
+    else:
+        violations = verify_collectives(
+            coll, required, "grad", label=name, dtype_bytes=4,
+            optional=optional)
+        shardcheck = {
+            "verdict": "pass" if not violations else "fail",
+            "skipped_reason": None,
+            "replicated_ways": replicated,
+            "expected": required, "optional": optional,
+            "observed": {k: int(coll.get(k, 0))
+                         for k in required},
+            "violations": [v.render() for v in violations],
+        }
+    assert not violations, (
+        f"{name}: compiled collectives break the shardcheck contract:\n  "
+        + "\n  ".join(v.render() for v in violations))
     result = {
         "cell": name, "kind": "conv_grad", "algorithm": algorithm,
         "partition": partition_name(partition), "axis": list(axes),
@@ -273,6 +310,7 @@ def run_conv_cell(name: str, multi_pod: bool, out_dir: pathlib.Path,
             },
         },
         "analytic": analytic,
+        "shardcheck": shardcheck,
     }
     out_dir.mkdir(parents=True, exist_ok=True)
     tag = f"{name}__{'multipod' if multi_pod else 'pod'}"

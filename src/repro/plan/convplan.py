@@ -740,8 +740,15 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
             interpret=interpret, calibration=calibration)
         # tune_measured already ran the Pallas assert; replaying it
         # through replace() only re-runs __post_init__ validation.
-        return dataclasses.replace(base, partition=parts,
+        plan = dataclasses.replace(base, partition=parts,
                                    partition_axes=axes)
+        if plan.partition:
+            # Same rule as the Pallas hook: never return a partitioned
+            # plan whose compiled collectives break the costmodel
+            # contract (skips silently when no mesh is installed).
+            from repro.analysis.shardcheck import assert_plan_contract
+            assert_plan_contract(plan)
+        return plan
 
     from repro.launch.costmodel import pick_conv2d_algorithm
     algorithm = pick_conv2d_algorithm(spec, backend,
@@ -758,6 +765,12 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
         # static checker rejects — raising here beats faulting at execute.
         from repro.analysis.pallas_check import assert_plan
         assert_plan(plan)
+    if plan.partition:
+        # Partitioned plans additionally pass the collective contract
+        # (halo/psum bytes vs. the costmodel, no accidental resharding;
+        # DESIGN.md §8).  Skips silently when no mesh is installed.
+        from repro.analysis.shardcheck import assert_plan_contract
+        assert_plan_contract(plan)
     return plan
 
 

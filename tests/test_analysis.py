@@ -288,6 +288,42 @@ def test_lint_shard_map_import_outside_compat(tmp_path):
         """) == []
 
 
+def test_lint_bare_dot_precision_flagged_in_numeric_core(tmp_path):
+    src = """
+        import jax.numpy as jnp
+        def f(a, b):
+            return jnp.einsum("ij,jk->ik", a, b)
+        """
+    findings = _lint_src(tmp_path, src, rel="src/repro/core/x.py")
+    assert [f.rule for f in findings] == ["no-bare-dot-precision"]
+    assert findings[0].symbol == "f:jnp.einsum"
+    # same call inside kernels/parallel is in scope too...
+    assert _lint_src(tmp_path, src, rel="src/repro/parallel/x.py") != []
+    # ...but bench/launch glue may use backend defaults
+    assert _lint_src(tmp_path, src, rel="src/repro/bench/x.py") == []
+
+
+def test_lint_bare_dot_precision_annotated_or_splat_ok(tmp_path):
+    assert _lint_src(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+        def f(a, b, kw):
+            x = jnp.dot(a, b, precision="highest")
+            y = jnp.einsum("ij,jk->ik", a, b,
+                           preferred_element_type=jnp.float32)
+            z = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())), **kw)
+            return x + y + z
+        """, rel="src/repro/kernels/x.py") == []
+
+
+def test_lint_bare_dot_precision_suppression(tmp_path):
+    assert _lint_src(tmp_path, """
+        import jax.numpy as jnp
+        def f(a, b):
+            return jnp.dot(a, b)  # lint-ignore: no-bare-dot-precision
+        """, rel="src/repro/core/x.py") == []
+
+
 def test_lint_baseline_roundtrip_and_fixed_detection(tmp_path):
     f1 = lint.Finding("accepted-kwarg-not-forwarded", "src/a.py",
                       "f:x", 3, "msg")
@@ -322,6 +358,45 @@ def test_lint_tree_is_clean_against_committed_baseline():
         root / "benchmarks/baselines/lint_baseline.json")
     split = lint.apply_baseline(lint.lint_tree(root), baseline)
     assert split["new"] == [], [f.render() for f in split["new"]]
+
+
+# ---------------------------------------------------------------------------
+# autotune trial replay (the --suite pallas coverage extension)
+# ---------------------------------------------------------------------------
+
+def test_autotune_stage2_w520_grid_passes_geometry():
+    """The committed w520 cell tuned w_blk=520, past pick_w_blk's 512
+    default cap — every stage-2 grid candidate the autotuner trials must
+    be geometry-admissible, including that over-cap one."""
+    from repro.plan.convplan import _pallas_w_blk, _stage2_trials
+    spec = ConvSpec(1, 3, 522, 3, 3, 3, 8, 1, 1)       # o_w = 520
+    assert _pallas_w_blk(spec, "mec_fused") == 512
+    knob, plans = _stage2_trials(spec, "float32", "mec_fused", None, "cpu")
+    assert knob == "w_blk"
+    assert set(plans) == {"256", "512", "520"}
+    for label, trial in plans.items():
+        res = check_geometry(trial.spec, "mec_fused", trial.w_blk,
+                             "float32")
+        assert res.ok, f"w_blk={label}: {res.render()}"
+
+
+def test_committed_autotune_trials_replay_clean():
+    """Every (Pallas) w_blk the committed BENCH_autotune.json actually
+    trialed replays through the static geometry gate."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    doc = json.loads((root / "BENCH_autotune.json").read_text())
+    replayed = 0
+    for r in doc["results"]:
+        tuning = r.get("tuning")
+        if not tuning or tuning.get("algorithm") not in PALLAS_ALGORITHMS:
+            continue
+        spec = ConvSpec(**r["run_spec"])
+        for label, t in tuning["trials"].items():
+            res = check_geometry(spec, tuning["algorithm"], t.get("w_blk"),
+                                 r["dtype"])
+            assert res.ok, f"{r['scenario']} w_blk={label}: {res.render()}"
+            replayed += 1
+    assert replayed >= 3      # the w520 grid alone contributes three
 
 
 # ---------------------------------------------------------------------------
