@@ -7,13 +7,17 @@
   checking of the Pallas kernel geometries, no compile needed.
 * :mod:`repro.analysis.shardcheck` — the distributed-conv collective
   contract (halo permute / psum all-reduce bytes vs. the costmodel,
-  zero accidental resharding) plus the precision-flow pass over every
-  partitioned lowering.
+  zero accidental resharding) over every partitioned lowering.
+* :mod:`repro.analysis.numcheck` — the numeric contract (DESIGN.md
+  §8.5): dtype-flow signature extraction (accumulation widths, cast
+  edges, in-kernel Pallas accumulators), the narrow-then-widen
+  detector, the precision-flow pass (promoted from shardcheck), and
+  the measured f64 error-budget probe, for every backend x dtype.
 * :mod:`repro.analysis.lint` — AST invariants for bug classes this repo
   has already shipped (dropped kwargs, stray env reads, shard_map
   imports bypassing the compat shim, bare un-annotated GEMMs).
 
-Run all four: ``python -m repro.analysis --suite all``.
+Run all five: ``python -m repro.analysis --suite all``.
 
 Layering: analysis may import ``core``/``kernels``/``bench`` freely but
 never ``repro.plan`` at module level — the planner calls *into*
@@ -38,7 +42,15 @@ _EXPORTS = {
     "assert_plan": "repro.analysis.pallas_check",
     "check_geometry": "repro.analysis.pallas_check",
     "check_plan": "repro.analysis.pallas_check",
-    "ContractViolation": "repro.analysis.shardcheck",
+    "ContractViolation": "repro.analysis.numcheck",
+    "NumCheck": "repro.analysis.numcheck",
+    "NumCheckError": "repro.analysis.numcheck",
+    "assert_plan_numerics": "repro.analysis.numcheck",
+    "cell_numcheck": "repro.analysis.numcheck",
+    "check_numerics": "repro.analysis.numcheck",
+    "error_probe": "repro.analysis.numcheck",
+    "extract_signature": "repro.analysis.numcheck",
+    "precision_flow_findings": "repro.analysis.numcheck",
     "ShardCheck": "repro.analysis.shardcheck",
     "ShardCheckError": "repro.analysis.shardcheck",
     "assert_plan_contract": "repro.analysis.shardcheck",

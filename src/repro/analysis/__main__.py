@@ -1,5 +1,5 @@
 """CLI: ``python -m repro.analysis --suite
-memaudit|pallas|lint|shardcheck|all``.
+memaudit|pallas|lint|shardcheck|numcheck|all``.
 
 Exit status is non-zero on any violation — this is what the CI
 ``static-analysis`` job runs on every push.  ``--update-lint-baseline``
@@ -11,6 +11,11 @@ The ``shardcheck`` suite forces a host platform with
 :data:`SHARDCHECK_FORCED_DEVICES` devices (the env must be set before
 jax initializes, so ``main`` does it up front) and writes the full
 collective-contract evidence to ``BENCH_shardcheck.json``.
+
+The ``numcheck`` suite (DESIGN.md §8.5) sweeps every conv backend x
+{f32, bf16, f16}: static dtype-flow signature checks on fwd + grad plus
+the measured f64 error-budget probe, written to ``BENCH_numcheck.json``
+(CI gates the deterministic fields against the committed baseline).
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import os
 import pathlib
 import sys
 
-SUITES = ("memaudit", "pallas", "lint", "shardcheck", "all")
+SUITES = ("memaudit", "pallas", "lint", "shardcheck", "numcheck", "all")
 
 # Enough forced host devices for every committed dist-baseline mesh
 # except the 256-way pod cells (those record an explicit skip — a CLI
@@ -201,6 +206,63 @@ def _run_shardcheck(args) -> int:
     return 0
 
 
+def _run_numcheck(args) -> int:
+    """Numeric-contract check of every backend x contract dtype
+    (DESIGN.md §8.5): static signature detectors on fwd + grad, then the
+    measured error-budget probe vs the f64 reference.  Skips (winograd
+    off-geometry, Pallas-rejected cells, unregistered backends) are
+    recorded, never silently dropped.  Writes the full evidence to
+    ``BENCH_numcheck.json``."""
+    from repro.analysis.numcheck import (NUMCHECK_ALGORITHMS,
+                                         NUMCHECK_DTYPES, check_numerics,
+                                         probe_spec)
+    from repro.bench.report import make_report, write_report
+    from repro.bench.scenarios import ALGORITHM_VARIANTS
+    root = pathlib.Path(__file__).resolve().parents[3]
+    spec = probe_spec()
+    results = []
+    n_fail = n_skip = 0
+    for variant in NUMCHECK_ALGORITHMS:
+        kw = ALGORITHM_VARIANTS.get(variant, {"algorithm": variant})
+        for dtype in NUMCHECK_DTYPES:
+            chk = check_numerics(spec, kw.get("algorithm", variant), dtype,
+                                 solution=kw.get("solution", "auto"),
+                                 interpret=True)
+            rec = dict(chk.record)
+            rec.update({
+                "scenario": f"numprobe_{dtype}",
+                "algorithm": variant,
+                "spec": {f: getattr(spec, f) for f in
+                         ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c",
+                          "s_h", "s_w")},
+                "source": "probe-spec",
+            })
+            results.append(rec)
+            if chk.record["verdict"] == "fail":
+                n_fail += 1
+                print(f"numcheck: FAIL {variant}/{dtype}:")
+                for v in chk.record["violations"]:
+                    print(f"  {v}")
+            elif chk.record["verdict"] == "skipped":
+                n_skip += 1
+                print(f"numcheck: skip {variant}/{dtype}: "
+                      f"{chk.record['skipped_reason']}")
+    out = pathlib.Path(args.numcheck_out or root / "BENCH_numcheck.json")
+    doc = make_report("numcheck", results,
+                      harness={"directions": ["fwd", "grad"],
+                               "probe_seed": 0,
+                               "reference": "numpy-f64"})
+    write_report(doc, out)
+    print(f"numcheck: report written to {out}")
+    verified = len(results) - n_fail - n_skip
+    if n_fail:
+        print(f"numcheck: {n_fail} cell(s) broke their numeric contract")
+        return 1
+    print(f"numcheck: {verified} cell(s) verified, {n_skip} skipped, "
+          f"0 contract violations")
+    return 0
+
+
 def _run_lint(args) -> int:
     from repro.analysis.lint import (apply_baseline, lint_tree,
                                      load_baseline, repo_root,
@@ -259,6 +321,9 @@ def main(argv=None) -> int:
     parser.add_argument("--shardcheck-out", default=None,
                         help="shardcheck report path "
                              "(default: BENCH_shardcheck.json)")
+    parser.add_argument("--numcheck-out", default=None,
+                        help="numcheck report path "
+                             "(default: BENCH_numcheck.json)")
     args = parser.parse_args(argv)
     if args.suite in ("shardcheck", "all"):
         # Must happen before anything imports-and-initializes jax (the
@@ -278,6 +343,8 @@ def main(argv=None) -> int:
         rc |= _run_pallas(args)
     if args.suite in ("memaudit", "all"):
         rc |= _run_memaudit(args)
+    if args.suite in ("numcheck", "all"):
+        rc |= _run_numcheck(args)
     if args.suite in ("shardcheck", "all"):
         rc |= _run_shardcheck(args)
     return rc

@@ -69,8 +69,12 @@ RULES = (
 
 # Directories whose GEMM call sites must pin their numerics (the rule
 # scope, not the scan scope — bench/examples glue may use defaults).
+# PR 10 widened the scope from the numeric core to everything that
+# executes on the serving/training path and burned the grandfathered
+# baseline to zero — new findings fail outright now.
 _DOT_PRECISION_DIRS = ("src/repro/core/", "src/repro/kernels/",
-                       "src/repro/parallel/")
+                       "src/repro/parallel/", "src/repro/models/",
+                       "src/repro/serving/", "src/repro/plan/")
 _DOT_CALLEES = ("dot", "einsum", "dot_general")
 
 # Files allowed to read the environment raw: the version-compat shim and

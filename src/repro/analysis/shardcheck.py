@@ -50,7 +50,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import re
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
@@ -66,24 +65,15 @@ DIRECTIONS = ("fwd", "grad")
 # convolution).
 SCALAR_REDUCE_ALLOWANCE_BYTES = 64
 
-_HLO_DOT_RE = re.compile(r"=\s*\S+\s+(?:dot|convolution)\(")
+# ContractViolation (and the whole precision-flow pass further down) was
+# promoted to repro.analysis.numcheck in PR 10; shardcheck's collective
+# rules reuse the same violation type so mixed reports render uniformly.
+from repro.analysis.numcheck import _HLO_DOT_RE  # noqa: F401
+from repro.analysis.numcheck import ContractViolation  # noqa: F401
 
 
 class ShardCheckError(AssertionError):
     """A partitioned lowering broke its collective/precision contract."""
-
-
-
-
-@dataclasses.dataclass(frozen=True)
-class ContractViolation:
-    rule: str          # missing-collective | unexpected-collective |
-    #                    collective-bytes-mismatch | precision-flow
-    direction: str     # 'fwd' | 'grad' | 'static'
-    message: str
-
-    def render(self) -> str:
-        return f"[{self.rule}] {self.direction}: {self.message}"
 
 
 @dataclasses.dataclass
@@ -338,114 +328,16 @@ def verify_collectives(observed: Dict, expected: Dict[str, float],
 
 
 # ---------------------------------------------------------------------------
-# precision flow
+# precision flow — promoted to repro.analysis.numcheck (PR 10), where it
+# joined the full numeric-signature pass; re-exported here so the
+# partitioned contract (and its callers) keep one import surface.
 # ---------------------------------------------------------------------------
 
-def _subjaxprs(value):
-    """Jaxprs reachable from one eqn param (ClosedJaxpr, raw Jaxpr, or
-    containers of either — pallas_call kernels, custom_vjp branches,
-    shard_map bodies all hide theirs differently)."""
-    if hasattr(value, "eqns"):                       # raw Jaxpr
-        yield value
-    elif hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
-        yield value.jaxpr                            # ClosedJaxpr
-    elif isinstance(value, (tuple, list)):
-        for v in value:
-            yield from _subjaxprs(v)
-    elif isinstance(value, dict):
-        for v in value.values():
-            yield from _subjaxprs(v)
-
-
-def jaxpr_dot_precisions(closed) -> List[Tuple[str, object]]:
-    """``(primitive_name, precision_param)`` for every dot/convolution
-    eqn reachable through nested sub-jaxprs."""
-    out: List[Tuple[str, object]] = []
-    stack = [closed.jaxpr if hasattr(closed, "jaxpr") else closed]
-    seen = set()
-    while stack:
-        j = stack.pop()
-        if id(j) in seen:
-            continue
-        seen.add(id(j))
-        for eqn in j.eqns:
-            if eqn.primitive.name in ("dot_general",
-                                      "conv_general_dilated"):
-                out.append((eqn.primitive.name,
-                            eqn.params.get("precision")))
-            for v in eqn.params.values():
-                stack.extend(_subjaxprs(v))
-    return out
-
-
-def _precision_matches(param, declared: str) -> bool:
-    import jax
-    want = getattr(jax.lax.Precision, declared)
-    if param is None:
-        return False
-    vals = param if isinstance(param, tuple) else (param,)
-    return all(p == want for p in vals)
-
-
-def hlo_precision_tally(hlo_text: str,
-                        declared: Optional[str]) -> Dict[str, int]:
-    """dot/convolution ops in the (optimized) HLO, and how many lack
-    the declared ``operand_precision`` marker.  With no declared
-    precision nothing is required (XLA's default annotation is fine)."""
-    dots = 0
-    unannotated = 0
-    marker = None if declared is None else \
-        "operand_precision={" + declared.lower()
-    for line in hlo_text.splitlines():
-        if not _HLO_DOT_RE.search(line):
-            continue
-        dots += 1
-        if marker is not None and marker not in line:
-            unannotated += 1
-    return {"dots": dots, "unannotated": unannotated}
-
-
-def precision_flow_findings(closed_jaxprs: Sequence,
-                            hlo_texts: Sequence[str],
-                            declared: Optional[str]
-                            ) -> Tuple[Dict, List[ContractViolation]]:
-    """The precision-flow pass over one cell's lowerings.
-
-    ``declared`` is the plan's canonical precision name ('HIGHEST' /
-    'HIGH' / 'DEFAULT') or None (nothing declared — trivially clean).
-    The jaxpr walk is the primary evidence (it sees inside Pallas
-    kernels and custom-VJP branches, which HLO fusions can hide); the
-    HLO scan is the backstop that the annotation *survived* lowering.
-    """
-    tally = {"declared": declared, "dot_ops": 0, "unannotated_dot_ops": 0,
-             "hlo_dots": 0, "hlo_unannotated": 0}
-    violations: List[ContractViolation] = []
-    for closed in closed_jaxprs:
-        for name, param in jaxpr_dot_precisions(closed):
-            tally["dot_ops"] += 1
-            if declared not in (None, "DEFAULT") and \
-                    not _precision_matches(param, declared):
-                tally["unannotated_dot_ops"] += 1
-    for text in hlo_texts:
-        t = hlo_precision_tally(
-            text, None if declared in (None, "DEFAULT") else declared)
-        tally["hlo_dots"] += t["dots"]
-        tally["hlo_unannotated"] += t["unannotated"]
-    if tally["unannotated_dot_ops"]:
-        violations.append(ContractViolation(
-            "precision-flow", "static",
-            f"{tally['unannotated_dot_ops']}/{tally['dot_ops']} "
-            f"dot/convolution op(s) in the jaxpr lack the declared "
-            f"precision={declared} — a kwargs path dropped precision= "
-            f"before the GEMM (the PR 4/5 silent-downcast bug class)"))
-    if tally["hlo_unannotated"]:
-        violations.append(ContractViolation(
-            "precision-flow", "static",
-            f"{tally['hlo_unannotated']}/{tally['hlo_dots']} "
-            f"dot/convolution op(s) in the optimized HLO lack "
-            f"operand_precision={{{str(declared).lower()},...}} — the "
-            f"declared precision did not survive lowering"))
-    return tally, violations
+from repro.analysis.numcheck import (_subjaxprs,  # noqa: F401,E402
+                                     _precision_matches,
+                                     hlo_precision_tally,
+                                     jaxpr_dot_precisions,
+                                     precision_flow_findings)
 
 
 # ---------------------------------------------------------------------------

@@ -56,7 +56,23 @@ OPTIONAL_EXACT_FIELDS = ("partition", "n_dev", "n_dev_axes",
                          "per_device_overhead_elems",
                          "comm_bytes_per_device", "auto_partition",
                          "serve_mode", "shape_class", "n_classes",
-                         "n_requests", "shardcheck")
+                         "n_requests", "shardcheck", "numcheck")
+
+# Reports whose suite carries its own record schema (DESIGN.md §8) gate
+# exactly on their *deterministic* fields only — verdicts, contracts,
+# rendered violations — never on the measured/version-sensitive ones
+# (probe errors move at the ulp level across jax/XLA releases, jaxpr
+# dot/cast tallies move when jax changes its lowering).  These fields
+# have no us_per_call/hlo_* either, so the timing policy is skipped.
+SUITE_EXACT_FIELDS = {
+    "numcheck": ("dtype", "spec", "source", "contract", "verdict",
+                 "skipped_reason", "violations"),
+    "shardcheck": ("dtype", "spec", "source", "partition", "n_dev",
+                   "n_dev_axes", "verdict", "skipped_reason",
+                   "violations"),
+    "memaudit": ("dtype", "spec", "predicted_overhead_elems",
+                 "predicted_overhead_bytes", "policy", "verdict"),
+}
 
 
 def _load(path) -> Dict:
@@ -185,11 +201,12 @@ def compare(new: Dict, baseline: Dict, timing_rtol: float = 1.0,
         notes.append(f"jax version differs: new="
                      f"{new['environment']['jax']} baseline="
                      f"{baseline['environment']['jax']}")
-    exact_fields = EXACT_FIELDS
+    suite_schema = new["suite"] in SUITE_EXACT_FIELDS
+    exact_fields = SUITE_EXACT_FIELDS.get(new["suite"], EXACT_FIELDS)
     if new["environment"]["backend"] != baseline["environment"]["backend"]:
         # auto dispatch branches on the backend (DESIGN.md §1), so across
         # backends its pick is expected to differ — don't gate on it.
-        exact_fields = tuple(f for f in EXACT_FIELDS
+        exact_fields = tuple(f for f in exact_fields
                              if f != "auto_algorithm")
         notes.append(f"backend differs: new="
                      f"{new['environment']['backend']} baseline="
@@ -205,9 +222,14 @@ def compare(new: Dict, baseline: Dict, timing_rtol: float = 1.0,
                             "(coverage regression)")
             continue
         for f in exact_fields:
-            if rec[f] != base[f]:
+            if rec.get(f) != base.get(f):
                 failures.append(f"{key}: {f} changed "
-                                f"{base[f]!r} -> {rec[f]!r}")
+                                f"{base.get(f)!r} -> {rec.get(f)!r}")
+        if suite_schema:
+            # Suite-schema records carry no optional dist/serve block
+            # and no timing fields — the exact set above is the whole
+            # gate.
+            continue
         for f in OPTIONAL_EXACT_FIELDS:
             if f in base and rec.get(f) != base[f]:
                 failures.append(f"{key}: {f} changed "

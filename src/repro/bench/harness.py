@@ -209,6 +209,18 @@ def measure(sc: Scenario, algorithm: str, iters: int = 3, warmup: int = 1,
                 if "expected" in info},
             "violations": chk["violations"],
         }
+    if with_hlo and mesh is None:
+        # Numeric-contract verdict for the single-device cell
+        # (repro.analysis.numcheck, DESIGN.md §8.5).  Static-only (no
+        # probe — the harness must not pay an extra execution per cell)
+        # and memoized across cells sharing a (spec, algorithm, dtype);
+        # the reduced field is the version-robust verdict, the full
+        # signature + probe evidence lives in BENCH_numcheck.json
+        # (python -m repro.analysis --suite numcheck).
+        from repro.analysis.numcheck import cell_numcheck
+        record["numcheck"] = cell_numcheck(
+            sc.run_spec, kwargs.get("algorithm", "auto"), sc.dtype,
+            solution=kwargs.get("solution", "auto"), interpret=interpret)
     if with_timing:
         timing = time_compiled(lambda: compiled(inp, ker),
                                iters=iters, warmup=warmup)

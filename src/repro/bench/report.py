@@ -77,6 +77,11 @@ OPTIONAL_RESULT_FIELDS = {
     # tally, verdict, rendered violations.  Exact-gated by check.py when
     # the baseline carries it.
     "shardcheck": dict,
+    # Numeric-contract verdict for any with-HLO cell
+    # (repro.analysis.numcheck, DESIGN.md §8.5): the reduced static
+    # record — verdict, skipped_reason, rendered violations.  Exact-gated
+    # by check.py when the baseline carries it.
+    "numcheck": dict,
 }
 
 # Fields newer than the first dist baselines: type-checked when present
@@ -88,7 +93,7 @@ _BLOCK_EXEMPT_FIELDS = ("n_dev_axes", "plan", "serve_mode", "shape_class",
                         "n_classes", "n_requests", "p50_us", "p99_us",
                         "first_request_us", "throughput_rps",
                         "warmup_warnings", "plan_cache_io_errors",
-                        "shardcheck")
+                        "shardcheck", "numcheck")
 
 # Suite "memaudit" (repro.analysis.memaudit, DESIGN.md §8): one record
 # per audited (scenario, algorithm) cell — XLA's measured temp bytes vs.
@@ -135,10 +140,34 @@ SHARDCHECK_RESULT_FIELDS = {
     "violations": list,
 }
 
+# Suite "numcheck" (repro.analysis.numcheck, DESIGN.md §8.5): one
+# record per (backend variant, dtype) cell on the fixed probe spec —
+# the backend's declared numeric contract, per-direction signature
+# counts (dots, in-kernel dots, casts, narrows back to the input
+# dtype), the precision-flow tally when a precision was declared, and
+# the measured fwd/grad error vs the f64 reference beside its contract
+# budget.  verdict is "pass"/"fail"/"skipped"; skipped cells say why
+# (winograd off-geometry, Pallas-rejected, unregistered backend/dtype).
+NUMCHECK_RESULT_FIELDS = {
+    "scenario": str,
+    "algorithm": str,
+    "dtype": str,
+    "spec": dict,
+    "source": str,
+    "contract": (dict, type(None)),
+    "directions": dict,
+    "precision_flow": (dict, type(None)),
+    "probe": (dict, type(None)),
+    "verdict": str,
+    "skipped_reason": (str, type(None)),
+    "violations": list,
+}
+
 # suite name -> required per-record fields; unknown suites use the
 # default timing schema above.
 RESULT_FIELDS_BY_SUITE = {"memaudit": MEMAUDIT_RESULT_FIELDS,
-                          "shardcheck": SHARDCHECK_RESULT_FIELDS}
+                          "shardcheck": SHARDCHECK_RESULT_FIELDS,
+                          "numcheck": NUMCHECK_RESULT_FIELDS}
 
 SPEC_FIELDS = ("i_n", "i_h", "i_w", "i_c", "k_h", "k_w", "k_c", "s_h", "s_w")
 

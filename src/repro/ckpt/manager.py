@@ -156,8 +156,6 @@ class CheckpointManager:
             shard_tree = shardings.get(name) if shardings else None
             flat_shard = _flatten(shard_tree) if shard_tree is not None else None
 
-            def rebuild(path_leaf):
-                return None
             # reconstruct in tree order
             leaves_sorted = []
             for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:

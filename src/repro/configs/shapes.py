@@ -104,7 +104,7 @@ def make_batch(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> Dict:
     specs = input_specs(cfg, cell)
     key = jax.random.key(seed)
 
-    def gen(path, s):
+    def gen(path, s):  # lint-ignore: accepted-kwarg-not-forwarded (tree_map_with_path callback signature)
         nonlocal key
         key, sub = jax.random.split(key)
         if jnp.issubdtype(s.dtype, jnp.integer):

@@ -73,7 +73,7 @@ def accumulator_budget(*, _warn_env: bool = True) -> int:
     by the ``conv2d`` executor).  Reads of the env var on the kwargs
     fallback path emit a DeprecationWarning; behaviour is unchanged.
     """
-    env = os.environ.get(ACC_BYTES_ENV)  # lint-ignore: deprecated-acc-bytes-env
+    env = os.environ.get(ACC_BYTES_ENV)  # lint-ignore: deprecated-acc-bytes-env, raw-environ-read-outside-compat (this IS the deprecation shim for the env var)
     if env:
         if _warn_env:
             warnings.warn(

@@ -33,7 +33,8 @@ def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
 
 
 def linear(x: jnp.ndarray, p: dict) -> jnp.ndarray:
-    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y

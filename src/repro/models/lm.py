@@ -244,7 +244,7 @@ class LM:
         return h, aux
 
     # hybrid: scan over super-blocks of (attn_every mamba) + shared attn+mlp
-    def _hybrid_stack(self, params, h, positions, mode, caches=None):
+    def _hybrid_stack(self, params, h, positions, mode, caches=None):  # lint-ignore: accepted-kwarg-not-forwarded (stack-dispatch signature shared with decode)
         cfg = self.cfg
         n_super, tail = divmod(cfg.n_layers, cfg.attn_every)
 
@@ -273,7 +273,7 @@ class LM:
         return h
 
     # ssm: supers of (slstm_every-1 mLSTM) + 1 sLSTM
-    def _ssm_stack(self, params, h, mode):
+    def _ssm_stack(self, params, h, mode):  # lint-ignore: accepted-kwarg-not-forwarded (stack-dispatch signature shared with decode)
         cfg = self.cfg
         m_body = _maybe_remat(
             lambda p, x: x + xlstm.mlstm_forward(p, cfg, x), cfg)
@@ -320,7 +320,7 @@ class LM:
                         params["enc_blocks"])
         return rms_norm(h, params["enc_norm"], cfg.norm_eps)
 
-    def _dec_block(self, p, x, positions, self_kv, enc):
+    def _dec_block(self, p, x, positions, self_kv, enc):  # lint-ignore: accepted-kwarg-not-forwarded (kv slot reserved for decode cache path)
         cfg = self.cfg
         a, kv = attention_block(p["attn"], cfg,
                                 rms_norm(x, p["norm1"], cfg.norm_eps),

@@ -154,7 +154,8 @@ def mamba_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
     # depthwise conv over (k_w-1 history, current)
     hist = jnp.concatenate([cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
     conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
-                          p["conv_w"].astype(jnp.float32))
+                          p["conv_w"].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
     xbc_c = jax.nn.silu(conv_out)
     xs = xbc_c[..., :d_in].reshape(-1, h, p_dim)
     b_vec = xbc_c[..., d_in:d_in + n]
@@ -163,8 +164,10 @@ def mamba_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
     a = -jnp.exp(p["a_log"])
     da = jnp.exp(dt * a[None, :])                                  # (B, H)
     state = (cache["state"] * da[..., None, None]
-             + jnp.einsum("bh,bhp,bn->bhpn", dt, xs, b_vec))
-    y = jnp.einsum("bhpn,bn->bhp", state, c_vec)
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xs, b_vec,
+                          preferred_element_type=jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec,
+                   preferred_element_type=jnp.float32)
     y = y + xs * p["d_skip"][None, :, None]
     y = y.reshape(-1, 1, d_in).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, None, :],

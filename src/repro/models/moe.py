@@ -49,7 +49,8 @@ def _capacity(t: int, cfg) -> int:
 
 def _route(x_flat: jnp.ndarray, router_w: jnp.ndarray, cfg):
     """x_flat (T, d) -> gate weights (T, k), expert ids (T, k), aux loss."""
-    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w,
+                        preferred_element_type=jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gw, idx = lax.top_k(probs, cfg.top_k)
     gw = gw / jnp.maximum(gw.sum(-1, keepdims=True), 1e-9)
@@ -61,7 +62,7 @@ def _route(x_flat: jnp.ndarray, router_w: jnp.ndarray, cfg):
     return gw, idx, aux
 
 
-def _pack(x_flat, gw, idx, capacity: int, cfg):
+def _pack(x_flat, gw, idx, capacity: int, cfg):  # lint-ignore: accepted-kwarg-not-forwarded (gates applied at unpack; kept for dispatch symmetry)
     """Scatter tokens into (E, C, d) capacity buckets."""
     t, d = x_flat.shape
     k, e = cfg.top_k, cfg.n_experts

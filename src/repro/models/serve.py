@@ -35,7 +35,8 @@ def _logits_last(model: LM, params, h):
     """Last-position logits (B, V)."""
     w = model.head_weights(params)
     return jnp.einsum("bd,dv->bv", h[:, -1, :].astype(jnp.float32),
-                      w.astype(jnp.float32))
+                      w.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
 
 
 def _logits_one(model: LM, params, h):
@@ -190,7 +191,7 @@ def _hybrid_decode(model: LM, params, cache, tokens):
 # ssm (xLSTM)
 # ---------------------------------------------------------------------------
 
-def _ssm_prefill(model: LM, params, batch, max_len: int):
+def _ssm_prefill(model: LM, params, batch, max_len: int):  # lint-ignore: accepted-kwarg-not-forwarded (prefill-dispatch signature; ssm caches are length-free)
     cfg = model.cfg
     h = model.embed(params, batch["tokens"])
 

@@ -78,7 +78,8 @@ def mlstm_parallel(q, k, v, log_i, log_f, q_chunk: int = 256):
         sl = lambda t: lax.dynamic_slice_in_dim(t, iq * q_chunk, q_chunk, axis=1)
         q_i = sl(q).astype(jnp.float32)                     # (B, c, H, P)
         f_i = sl(f_cum)                                     # (B, c, H)
-        scores = jnp.einsum("bthp,bshp->bhts", q_i, kt)     # (B, H, c, S)
+        scores = jnp.einsum("bthp,bshp->bhts", q_i, kt,
+                            preferred_element_type=jnp.float32)  # (B,H,c,S)
         dmat = (f_i.transpose(0, 2, 1)[:, :, :, None]
                 + bias_k.transpose(0, 2, 1)[:, :, None, :])  # (B,H,c,S)
         qpos = iq * q_chunk + jnp.arange(q_chunk)
@@ -87,7 +88,9 @@ def mlstm_parallel(q, k, v, log_i, log_f, q_chunk: int = 256):
         m = jnp.maximum(dmat.max(axis=-1), -p * 10.0)       # (B, H, c)
         w = jnp.exp(dmat - m[..., None]) * scores
         den = jnp.maximum(jnp.abs(w.sum(-1)), jnp.exp(-m))  # (B, H, c)
-        out = jnp.einsum("bhts,bshp->bthp", w, vt) / den.transpose(0, 2, 1)[..., None]
+        out = jnp.einsum("bhts,bshp->bthp", w, vt,
+                         preferred_element_type=jnp.float32
+                         ) / den.transpose(0, 2, 1)[..., None]
         return out                                          # (B, c, H, P)
 
     if pad:
@@ -141,8 +144,10 @@ def mlstm_prefill(p: dict, cfg, x: jnp.ndarray):
     m = jnp.maximum(f_s, bias.max(axis=1))                  # (B, H)
     w = jnp.exp(bias - m[:, None, :])                       # (B, S, H)
     kf = k.astype(jnp.float32) * pd ** -0.5
-    c_state = jnp.einsum("bsh,bshp,bsho->bhpo", w, kf, v.astype(jnp.float32))
-    n_state = jnp.einsum("bsh,bshp->bhp", w, kf)
+    c_state = jnp.einsum("bsh,bshp,bsho->bhpo", w, kf, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    n_state = jnp.einsum("bsh,bshp->bhp", w, kf,
+                         preferred_element_type=jnp.float32)
     conv = x_in[:, s - (cfg.conv_width - 1):, :].astype(jnp.float32)
     cache = {"c": c_state, "n": n_state, "m": m, "conv": conv}
     out = out.reshape(b, s, d_in).astype(x.dtype)
@@ -170,7 +175,8 @@ def mlstm_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
     hist = jnp.concatenate(
         [cache["conv"], x_in[:, None, :].astype(jnp.float32)], axis=1)
     xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist,
-                                p["conv_w"].astype(jnp.float32)))
+                                p["conv_w"].astype(jnp.float32),
+                                preferred_element_type=jnp.float32))
     xc = xc.astype(x.dtype)
     q = linear(xc, p["wq"]).reshape(b, h, pd).astype(jnp.float32)
     k = linear(xc, p["wk"]).reshape(b, h, pd).astype(jnp.float32) * pd ** -0.5
@@ -183,8 +189,10 @@ def mlstm_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
     iw = jnp.exp(log_i - m_new)[..., None]
     c_new = cache["c"] * fw[..., None] + iw[..., None] * (k[..., :, None] * v[..., None, :])
     n_new = cache["n"] * fw + iw * k
-    num = jnp.einsum("bhp,bhpo->bho", q, c_new)
-    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)),
+    num = jnp.einsum("bhp,bhpo->bho", q, c_new,
+                     preferred_element_type=jnp.float32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new,
+                                         preferred_element_type=jnp.float32)),
                       jnp.exp(-m_new))[..., None]
     out = (num / den).reshape(b, d_in).astype(x.dtype)
     out = rms_norm(out, p["norm"], cfg.norm_eps)
@@ -218,7 +226,8 @@ def _slstm_cell(p, cfg, xg, state):
     """One sLSTM step. xg: (B, 4*d_in) pre-activations from the input path."""
     d_in, h, pd = _dims(cfg)
     c, n, m, h_prev = state
-    rec = jnp.einsum("bhp,hqp->bhq", h_prev, p["r_gates"].astype(jnp.float32))
+    rec = jnp.einsum("bhp,hqp->bhq", h_prev, p["r_gates"].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
     g = xg.reshape(-1, h, 4 * pd).astype(jnp.float32) + rec
     zi, ii, fi, oi = jnp.split(g, 4, axis=-1)            # (B, H, P) each
     z = jnp.tanh(zi)
@@ -275,7 +284,9 @@ def slstm_decode(p: dict, cfg, x: jnp.ndarray, cache: dict
     hist = jnp.concatenate(
         [cache["conv"], x_in[:, None, :].astype(jnp.float32)], axis=1)
     xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist,
-                                p["conv_w"].astype(jnp.float32))).astype(x.dtype)
+                                p["conv_w"].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+                     ).astype(x.dtype)
     xg = linear(xc, p["w_gates"])
     state = (cache["c"], cache["n"], cache["m"], cache["h"])
     state_new, h_new = _slstm_cell(p, cfg, xg, state)

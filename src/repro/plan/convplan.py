@@ -748,6 +748,13 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
             # contract (skips silently when no mesh is installed).
             from repro.analysis.shardcheck import assert_plan_contract
             assert_plan_contract(plan)
+        # Every returned plan also passes the static numeric contract
+        # (DESIGN.md §8.5): accumulation widths, cast structure,
+        # in-kernel Pallas accumulators.  Trace-only and memoized, so
+        # planning stays cheap; the measured error-budget probe runs in
+        # the numcheck suite, not here.
+        from repro.analysis.numcheck import assert_plan_numerics
+        assert_plan_numerics(plan)
         return plan
 
     from repro.launch.costmodel import pick_conv2d_algorithm
@@ -771,6 +778,11 @@ def plan_conv2d(spec: ConvSpec, *, dtype="float32", mode: str = "analytic",
         # DESIGN.md §8).  Skips silently when no mesh is installed.
         from repro.analysis.shardcheck import assert_plan_contract
         assert_plan_contract(plan)
+    # Every returned plan passes the static numeric contract (DESIGN.md
+    # §8.5) for its resolved backend x dtype — accumulation widths, cast
+    # structure, in-kernel Pallas accumulators.  Trace-only + memoized.
+    from repro.analysis.numcheck import assert_plan_numerics
+    assert_plan_numerics(plan)
     return plan
 
 

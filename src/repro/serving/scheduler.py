@@ -79,7 +79,8 @@ def batched_decode_step(model: LM, params, cache: Dict, tokens: jnp.ndarray):
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     w = model.head_weights(params)
     logits = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
-                        w.astype(jnp.float32))
+                        w.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
     return logits, {"k": kc, "v": vc, "lens": cache["lens"] + 1}
 
 
